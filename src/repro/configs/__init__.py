@@ -1,0 +1,2 @@
+from repro.configs.base import *  # noqa
+from repro.configs.archs import ARCHS, smoke_config  # noqa

@@ -1,0 +1,179 @@
+"""The 10 assigned architectures (exact configs from the assignment sheet).
+
+Each also defines a ``smoke`` reduction (same family, tiny dims) used by the
+per-arch CPU smoke tests; the full configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (AttnConfig, MoEConfig, ModelConfig,
+                                RGLRUConfig, SSDConfig)
+
+# --------------------------------------------------------------------------
+# MoE family [hf:ibm-granite/granite-3.0-1b-a400m-base]
+# --------------------------------------------------------------------------
+
+GRANITE_MOE_1B = ModelConfig(
+    name="granite-moe-1b-a400m", family="moe",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49_155,
+    pattern=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=32, top_k=8, expert_d_ff=512),
+    tie_embeddings=True,
+)
+
+GRANITE_MOE_3B = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size=49_155,
+    pattern=(("attn", "moe"),),
+    moe=MoEConfig(n_experts=40, top_k=8, expert_d_ff=512),
+    tie_embeddings=True,
+)
+
+# --------------------------------------------------------------------------
+# Gemma-2 family [arXiv:2408.00118]: alternating local/global attention,
+# logit softcaps, sandwich norms, tied + sqrt(d)-scaled embeddings.
+# --------------------------------------------------------------------------
+
+GEMMA2_27B = ModelConfig(
+    name="gemma2-27b", family="dense",
+    n_layers=46, d_model=4608, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=36_864, vocab_size=256_000,
+    pattern=(("attn_local", "mlp"), ("attn", "mlp")),
+    attn=AttnConfig(causal=True, logit_softcap=50.0,
+                    query_scale=(4608 / 32) ** -0.5),
+    attn_local=AttnConfig(causal=True, window=4096, logit_softcap=50.0,
+                          query_scale=(4608 / 32) ** -0.5),
+    final_logit_softcap=30.0, tie_embeddings=True,
+    emb_scale_by_sqrt_dim=True, post_block_norm=True,
+)
+
+GEMMA2_9B = ModelConfig(
+    name="gemma2-9b", family="dense",
+    n_layers=42, d_model=3584, n_heads=16, n_kv_heads=8, head_dim=256,
+    d_ff=14_336, vocab_size=256_000,
+    pattern=(("attn_local", "mlp"), ("attn", "mlp")),
+    attn=AttnConfig(causal=True, logit_softcap=50.0, query_scale=256.0 ** -0.5),
+    attn_local=AttnConfig(causal=True, window=4096, logit_softcap=50.0,
+                          query_scale=256.0 ** -0.5),
+    final_logit_softcap=30.0, tie_embeddings=True,
+    emb_scale_by_sqrt_dim=True, post_block_norm=True,
+)
+
+# --------------------------------------------------------------------------
+# Dense [arXiv:2407.21783, arXiv:2407.14679]
+# --------------------------------------------------------------------------
+
+LLAMA3_405B = ModelConfig(
+    name="llama3-405b", family="dense",
+    n_layers=126, d_model=16_384, n_heads=128, n_kv_heads=8, head_dim=128,
+    d_ff=53_248, vocab_size=128_256,
+    rope_theta=500_000.0, tie_embeddings=False,
+)
+
+MINITRON_8B = ModelConfig(
+    name="minitron-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=16_384, vocab_size=256_000,
+    tie_embeddings=False,
+)
+
+# --------------------------------------------------------------------------
+# Mamba-2 [arXiv:2405.21060]: SSD, attention-free.
+# --------------------------------------------------------------------------
+
+MAMBA2_370M = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=50_280,
+    pattern=(("ssd",),),
+    ssd=SSDConfig(d_state=128, head_dim=64, expand=2, conv_width=4,
+                  chunk_size=256, n_groups=1),
+    tie_embeddings=True,
+)
+
+# --------------------------------------------------------------------------
+# RecurrentGemma / Griffin [arXiv:2402.19427]: RG-LRU + local attention 1:2.
+# --------------------------------------------------------------------------
+
+RECURRENTGEMMA_9B = ModelConfig(
+    name="recurrentgemma-9b", family="hybrid",
+    n_layers=38, d_model=4096, n_heads=16, n_kv_heads=1, head_dim=256,
+    d_ff=12_288, vocab_size=256_000,
+    pattern=(("rglru", "mlp"), ("rglru", "mlp"), ("attn", "mlp")),
+    attn=AttnConfig(causal=True, window=2048),
+    rglru=RGLRUConfig(lru_width=4096, conv_width=4),
+    tie_embeddings=True, emb_scale_by_sqrt_dim=True,
+)
+
+# --------------------------------------------------------------------------
+# Whisper [arXiv:2212.04356]: enc-dec, conv frontend stubbed (input_specs
+# provides precomputed frame embeddings at d_model).
+# --------------------------------------------------------------------------
+
+WHISPER_TINY = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+    d_ff=1536, vocab_size=51_865,
+    pattern=(("attn", "cross_attn", "mlp"),),
+    enc_layers=4, enc_seq_ratio=4,
+    tie_embeddings=True,
+)
+
+# --------------------------------------------------------------------------
+# InternVL2 [arXiv:2404.16821]: InternViT frontend stubbed (patch embeddings
+# at 3200 dims -> vis_proj); backbone = InternLM2-style decoder.
+# --------------------------------------------------------------------------
+
+INTERNVL2_26B = ModelConfig(
+    name="internvl2-26b", family="vlm",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16_384, vocab_size=92_553,
+    n_vision_tokens=1024,
+    tie_embeddings=False,
+)
+
+ARCHS = {c.name: c for c in [
+    GRANITE_MOE_1B, GRANITE_MOE_3B, GEMMA2_27B, GEMMA2_9B, LLAMA3_405B,
+    MINITRON_8B, MAMBA2_370M, RECURRENTGEMMA_9B, WHISPER_TINY, INTERNVL2_26B,
+]}
+
+
+# --------------------------------------------------------------------------
+# Smoke reductions: same family/pattern, tiny dims.
+# --------------------------------------------------------------------------
+
+def smoke_config(name: str) -> ModelConfig:
+    full = ARCHS[name]
+    kw = dict(
+        name=full.name + "-smoke", n_layers=min(full.n_layers,
+                                                3 * len(full.pattern)),
+        d_model=64, vocab_size=256,
+        act_dtype="float32",  # keeps decode-vs-forward checks tie-break stable
+    )
+    if full.n_heads:
+        kw.update(n_heads=4, n_kv_heads=min(full.n_kv_heads, 2), head_dim=16)
+    if full.d_ff:
+        kw.update(d_ff=128)
+    if full.moe:
+        # capacity_factor = E/k => zero token drops (keeps the smoke
+        # prefill/decode-vs-forward consistency checks exact)
+        kw.update(moe=dataclasses.replace(full.moe, n_experts=4, top_k=2,
+                                          expert_d_ff=32, capacity_factor=2.0))
+    if full.ssd:
+        kw.update(ssd=dataclasses.replace(full.ssd, d_state=16, head_dim=8,
+                                          chunk_size=16))
+    if full.rglru:
+        kw.update(rglru=dataclasses.replace(full.rglru, lru_width=64))
+    if full.attn_local:
+        kw.update(attn_local=dataclasses.replace(full.attn_local, window=32))
+    if full.attn.window:
+        kw.update(attn=dataclasses.replace(full.attn, window=32))
+    if full.family == "encdec":
+        kw.update(enc_layers=2)
+    if full.family == "vlm":
+        kw.update(n_vision_tokens=8)
+    return dataclasses.replace(full, **kw)

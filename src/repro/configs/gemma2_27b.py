@@ -1,0 +1,5 @@
+"""Assigned architecture config: gemma2_27b (see archs.py for the full definition)."""
+from repro.configs.archs import GEMMA2_27B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

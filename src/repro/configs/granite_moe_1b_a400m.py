@@ -1,0 +1,5 @@
+"""Assigned architecture config: granite_moe_1b_a400m (see archs.py for the full definition)."""
+from repro.configs.archs import GRANITE_MOE_1B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

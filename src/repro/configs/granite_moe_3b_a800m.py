@@ -1,0 +1,5 @@
+"""Assigned architecture config: granite_moe_3b_a800m (see archs.py for the full definition)."""
+from repro.configs.archs import GRANITE_MOE_3B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,5 @@
+"""Assigned architecture config: internvl2_26b (see archs.py for the full definition)."""
+from repro.configs.archs import INTERNVL2_26B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,5 @@
+"""Assigned architecture config: llama3_405b (see archs.py for the full definition)."""
+from repro.configs.archs import LLAMA3_405B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,5 @@
+"""Assigned architecture config: mamba2_370m (see archs.py for the full definition)."""
+from repro.configs.archs import MAMBA2_370M as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

@@ -1,0 +1,5 @@
+"""Assigned architecture config: minitron_8b (see archs.py for the full definition)."""
+from repro.configs.archs import MINITRON_8B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

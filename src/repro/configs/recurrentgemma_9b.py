@@ -1,0 +1,5 @@
+"""Assigned architecture config: recurrentgemma_9b (see archs.py for the full definition)."""
+from repro.configs.archs import RECURRENTGEMMA_9B as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

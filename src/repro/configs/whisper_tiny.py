@@ -1,0 +1,5 @@
+"""Assigned architecture config: whisper_tiny (see archs.py for the full definition)."""
+from repro.configs.archs import WHISPER_TINY as CONFIG
+from repro.configs.archs import smoke_config
+
+SMOKE = smoke_config(CONFIG.name)

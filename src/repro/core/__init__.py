@@ -1,0 +1,4 @@
+# The paper's primary contribution — implement the SYSTEM here
+# (scheduler, optimizer, data path, serving loop, etc.) in the
+# host framework. Add sibling subpackages for substrates.
+"""Workload Intelligence core: the paper's contribution as a library."""

@@ -1,0 +1,97 @@
+"""REST-ish JSON-over-TCP interface to the Global Manager (paper §4.2:
+"the WI global manager REST interface").
+
+Line-delimited JSON requests: {"op": ..., ...} -> {"ok": bool, ...}.
+Used by deployment tooling and logically-centralized workload managers (the
+YARN ResourceManager example in §4.2).  Runs on a thread; tests exercise a
+real socket round-trip.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import socketserver
+import threading
+from typing import Any, Dict, Optional
+
+from repro.core import hints as H
+from repro.core.global_manager import GlobalManager
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self):
+        gm: GlobalManager = self.server.gm   # type: ignore[attr-defined]
+        for line in self.rfile:
+            try:
+                req = json.loads(line.decode())
+                resp = _dispatch(gm, req)
+            except Exception as e:   # noqa: BLE001 — server must not die
+                resp = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+            self.wfile.write((json.dumps(resp) + "\n").encode())
+            self.wfile.flush()
+
+
+def _dispatch(gm: GlobalManager, req: Dict[str, Any]) -> Dict[str, Any]:
+    op = req.get("op")
+    if op == "register":
+        key = gm.register_workload(req["workload"], req.get("hints"),
+                                   tuple(req.get("resources", ["*"])))
+        return {"ok": True, "key": key.hex()}
+    if op == "set_hints":
+        ok = gm.set_hints(req["workload"], req.get("resource", "*"),
+                          req.get("hints", {}),
+                          scope=H.Scope(req.get("scope", "runtime")),
+                          source=req.get("source", "api"),
+                          envelope=req.get("envelope"))
+        return {"ok": ok}
+    if op == "get_hints":
+        return {"ok": True,
+                "hints": gm.effective_hints(req["workload"],
+                                            req.get("resource", "*"))}
+    if op == "aggregate":
+        return {"ok": True, "agg": gm.aggregate(req.get("level", "server"))}
+    if op == "events":
+        return {"ok": True,
+                "events": gm.events_for(req["workload"],
+                                        req.get("since_seq", 0))}
+    if op == "stats":
+        return {"ok": True, "stats": dict(gm.stats)}
+    return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+class ApiServer:
+    def __init__(self, gm: GlobalManager, host: str = "127.0.0.1",
+                 port: int = 0):
+        self._srv = socketserver.ThreadingTCPServer((host, port), _Handler,
+                                                    bind_and_activate=True)
+        self._srv.daemon_threads = True
+        self._srv.gm = gm                      # type: ignore[attr-defined]
+        self._thread = threading.Thread(target=self._srv.serve_forever,
+                                        daemon=True)
+
+    @property
+    def address(self):
+        return self._srv.server_address
+
+    def start(self):
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._srv.shutdown()
+        self._srv.server_close()
+
+
+class ApiClient:
+    def __init__(self, address):
+        self._sock = socket.create_connection(address)
+        self._f = self._sock.makefile("rwb")
+
+    def call(self, **req) -> Dict[str, Any]:
+        self._f.write((json.dumps(req) + "\n").encode())
+        self._f.flush()
+        return json.loads(self._f.readline().decode())
+
+    def close(self):
+        self._f.close()
+        self._sock.close()

@@ -1,0 +1,156 @@
+"""Kafka-like pub/sub log bus (paper §4.2).
+
+Semantics mirrored from Kafka because that is what WI deploys on:
+  * named topics, each an append-only partitioned log,
+  * publishers get (partition, offset) acks,
+  * consumer groups with committed offsets (at-least-once delivery),
+  * synchronous fan-out to push subscribers + pull (poll) interface,
+  * optional durable segments on disk so a restarted manager resumes.
+
+In-process and deterministic (no threads required; thread-safe anyway) —
+this is the "user-space implementation of WI" the paper open-sources for
+reproducibility (§6.1).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class Record:
+    __slots__ = ("topic", "partition", "offset", "key", "value", "ts")
+
+    def __init__(self, topic, partition, offset, key, value, ts=0.0):
+        self.topic, self.partition, self.offset = topic, partition, offset
+        self.key, self.value, self.ts = key, value, ts
+
+    def __repr__(self):
+        return (f"Record({self.topic}[{self.partition}]@{self.offset} "
+                f"key={self.key!r})")
+
+
+class _Partition:
+    def __init__(self):
+        self.log: List[Tuple[Any, Any, float]] = []
+
+    def append(self, key, value, ts) -> int:
+        self.log.append((key, value, ts))
+        return len(self.log) - 1
+
+
+class Bus:
+    """The WI message bus."""
+
+    def __init__(self, n_partitions: int = 4, durable_dir: Optional[str] = None,
+                 clock: Callable[[], float] = None):
+        self._n = n_partitions
+        self._topics: Dict[str, List[_Partition]] = {}
+        self._groups: Dict[Tuple[str, str], Dict[int, int]] = {}
+        self._subs: Dict[str, List[Callable[[Record], None]]] = {}
+        self._lock = threading.RLock()
+        self._clock = clock or (lambda: 0.0)
+        self._dir = Path(durable_dir) if durable_dir else None
+        if self._dir:
+            self._dir.mkdir(parents=True, exist_ok=True)
+            self._replay()
+
+    # -- internals ---------------------------------------------------------
+    def _topic(self, name: str) -> List[_Partition]:
+        if name not in self._topics:
+            self._topics[name] = [_Partition() for _ in range(self._n)]
+            self._subs.setdefault(name, [])
+        return self._topics[name]
+
+    def _partition_for(self, key) -> int:
+        if key is None:
+            return 0
+        return zlib.crc32(str(key).encode()) % self._n
+
+    def _segment_path(self, topic: str, part: int) -> Path:
+        return self._dir / f"{topic.replace('/', '_')}.{part}.log"
+
+    def _replay(self):
+        for f in sorted(self._dir.glob("*.log")):
+            stem = f.name[: -len(".log")]
+            topic, part = stem.rsplit(".", 1)
+            parts = self._topic(topic)
+            with f.open() as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        break   # torn tail write: ignore the rest
+                    parts[int(part)].log.append(
+                        (rec["k"], rec["v"], rec.get("ts", 0.0)))
+
+    # -- producer ----------------------------------------------------------
+    def publish(self, topic: str, value, key=None) -> Tuple[int, int]:
+        with self._lock:
+            parts = self._topic(topic)
+            p = self._partition_for(key)
+            ts = self._clock()
+            off = parts[p].append(key, value, ts)
+            if self._dir:
+                with self._segment_path(topic, p).open("a") as fh:
+                    fh.write(json.dumps({"k": key, "v": value, "ts": ts}) + "\n")
+            rec = Record(topic, p, off, key, value, ts)
+            subs = list(self._subs.get(topic, ()))
+        for cb in subs:     # synchronous push delivery (§4.2)
+            cb(rec)
+        return p, off
+
+    # -- push subscription ---------------------------------------------------
+    def subscribe(self, topic: str, callback: Callable[[Record], None]):
+        with self._lock:
+            self._topic(topic)
+            self._subs[topic].append(callback)
+        return lambda: self._subs[topic].remove(callback)
+
+    # -- consumer groups (pull) ---------------------------------------------
+    def poll(self, topic: str, group: str, max_records: int = 100
+             ) -> List[Record]:
+        with self._lock:
+            parts = self._topic(topic)
+            offsets = self._groups.setdefault((topic, group),
+                                              {i: 0 for i in range(self._n)})
+            out: List[Record] = []
+            for p, part in enumerate(parts):
+                start = offsets[p]
+                for off in range(start, min(len(part.log),
+                                            start + max_records - len(out))):
+                    k, v, ts = part.log[off]
+                    out.append(Record(topic, p, off, k, v, ts))
+                if out and out[-1].partition == p:
+                    offsets[p] = out[-1].offset + 1
+                if len(out) >= max_records:
+                    break
+            return out
+
+    def commit(self, topic: str, group: str, partition: int, offset: int):
+        with self._lock:
+            self._groups.setdefault((topic, group),
+                                    {i: 0 for i in range(self._n)})[partition] \
+                = offset + 1
+
+    def seek_to_beginning(self, topic: str, group: str):
+        with self._lock:
+            self._groups[(topic, group)] = {i: 0 for i in range(self._n)}
+
+    # -- introspection -------------------------------------------------------
+    def end_offsets(self, topic: str) -> Dict[int, int]:
+        with self._lock:
+            return {i: len(p.log) for i, p in enumerate(self._topic(topic))}
+
+    def lag(self, topic: str, group: str) -> int:
+        with self._lock:
+            ends = self.end_offsets(topic)
+            offs = self._groups.get((topic, group),
+                                    {i: 0 for i in range(self._n)})
+            return sum(ends[i] - offs.get(i, 0) for i in ends)

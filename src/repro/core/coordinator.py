@@ -1,0 +1,120 @@
+"""Conflict resolution across optimizations (paper §4.4, Table 4, Figure 3).
+
+Resources are *claimed* by optimization managers.  The coordinator resolves:
+  1. different priority  -> higher priority (lower Table-4 number) wins;
+  2. equal priority, compressible resource (CPU freq, harvested cores)
+     -> max-min fair share;
+  3. equal priority, non-compressible -> earliest request time wins;
+  4. simultaneous requests -> deterministic seeded random pick.
+
+It also enforces fair sharing *between workloads* inside one optimization's
+allocation (§4.4 last sentence).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.pricing import PRIORITY
+from repro.core.safety import FairShare
+
+
+@dataclass
+class Claim:
+    opt: str                    # optimization name (PRIORITY key)
+    workload: str
+    resource: str               # resource id, e.g. "server3/cpu_freq"
+    amount: float               # requested units
+    compressible: bool
+    ts: float                   # request time
+    claim_id: int = 0
+
+
+@dataclass
+class Grant:
+    claim: Claim
+    amount: float               # granted units (0 = denied)
+    reason: str = ""
+
+
+class Coordinator:
+    def __init__(self, seed: int = 0, clock=None):
+        self._rng = random.Random(seed)
+        self._clock = clock or (lambda: 0.0)
+        self._capacity: Dict[str, float] = {}
+        self._grants: Dict[str, List[Grant]] = {}
+        self._next_id = 0
+
+    def set_capacity(self, resource: str, capacity: float):
+        self._capacity[resource] = capacity
+
+    def submit(self, claims: List[Claim]) -> List[Grant]:
+        """Resolve a batch of claims resource by resource."""
+        for c in claims:
+            self._next_id += 1
+            c.claim_id = self._next_id
+        out: List[Grant] = []
+        by_res: Dict[str, List[Claim]] = {}
+        for c in claims:
+            by_res.setdefault(c.resource, []).append(c)
+        for res, cs in by_res.items():
+            out.extend(self._resolve(res, cs))
+        return out
+
+    # -- Figure 3 ------------------------------------------------------------
+    def _resolve(self, resource: str, claims: List[Claim]) -> List[Grant]:
+        cap = self._capacity.get(resource, float("inf"))
+        # already-granted amounts still count against capacity
+        cap -= sum(g.amount for g in self._grants.get(resource, ()))
+        grants: List[Grant] = []
+        # 1) order by priority (on-demand = 0 beats everything)
+        claims = sorted(claims, key=lambda c: (PRIORITY.get(c.opt, 99),))
+        i = 0
+        while i < len(claims):
+            prio = PRIORITY.get(claims[i].opt, 99)
+            tier = [c for c in claims if PRIORITY.get(c.opt, 99) == prio]
+            i += len(tier)
+            if cap <= 1e-12:
+                grants.extend(Grant(c, 0.0, "no capacity") for c in tier)
+                continue
+            if len(tier) == 1:
+                g = min(tier[0].amount, cap)
+                grants.append(Grant(tier[0], g, "sole claimant at priority"))
+                cap -= g
+                continue
+            if all(c.compressible for c in tier):
+                # 2) fair share among equal-priority compressible claims,
+                #    fair BETWEEN workloads first, then within a workload.
+                by_wl: Dict[str, List[Claim]] = {}
+                for c in tier:
+                    by_wl.setdefault(c.workload, []).append(c)
+                wl_alloc = FairShare.allocate(
+                    cap, {w: sum(c.amount for c in cs)
+                          for w, cs in by_wl.items()})
+                for w, cs in by_wl.items():
+                    inner = FairShare.allocate(
+                        wl_alloc[w], {str(c.claim_id): c.amount for c in cs})
+                    for c in cs:
+                        g = inner[str(c.claim_id)]
+                        grants.append(Grant(c, g, "fair share"))
+                        cap -= g
+            else:
+                # 3) earliest request wins; 4) random tiebreak
+                tier = sorted(tier, key=lambda c: (c.ts, self._rng.random()))
+                for c in tier:
+                    g = min(c.amount, cap)
+                    grants.append(Grant(
+                        c, g, "earliest request" if g else "no capacity"))
+                    cap -= g
+        self._grants.setdefault(resource, []).extend(
+            g for g in grants if g.amount > 0)
+        return grants
+
+    def release(self, resource: str, claim_id: int):
+        gs = self._grants.get(resource, [])
+        self._grants[resource] = [g for g in gs
+                                  if g.claim.claim_id != claim_id]
+
+    def granted(self, resource: str) -> float:
+        return sum(g.amount for g in self._grants.get(resource, ()))

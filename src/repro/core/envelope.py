@@ -1,0 +1,67 @@
+"""Signed + (demo-grade) encrypted hint envelopes (paper §4.3).
+
+"To protect workload owners from side-channel attacks, we encrypt the hint
+communication."  Offline we implement HMAC-SHA256 authenticity over a
+per-workload key plus an XOR keystream derived from the key (stand-in for
+TLS/AES on the wire — documented as such; the *interface* is what matters:
+managers only accept envelopes that verify).
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac
+import json
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+
+class KeyRegistry:
+    """Per-workload symmetric keys (provisioned at deployment)."""
+
+    def __init__(self):
+        self._keys: Dict[str, bytes] = {}
+
+    def provision(self, workload: str, key: Optional[bytes] = None) -> bytes:
+        k = key or hashlib.sha256(f"wi-key::{workload}".encode()).digest()
+        self._keys[workload] = k
+        return k
+
+    def key_for(self, workload: str) -> Optional[bytes]:
+        return self._keys.get(workload)
+
+
+def _keystream(key: bytes, nonce: bytes, n: int) -> bytes:
+    out = b""
+    counter = 0
+    while len(out) < n:
+        out += hashlib.sha256(key + nonce + counter.to_bytes(4, "big")).digest()
+        counter += 1
+    return out[:n]
+
+
+def seal(key: bytes, payload: Dict[str, Any], nonce: Optional[bytes] = None
+         ) -> Dict[str, str]:
+    raw = json.dumps(payload, sort_keys=True).encode()
+    nonce = nonce or os.urandom(12)
+    ks = _keystream(key, nonce, len(raw))
+    ct = bytes(a ^ b for a, b in zip(raw, ks))
+    mac = hmac.new(key, nonce + ct, hashlib.sha256).hexdigest()
+    return {"nonce": nonce.hex(), "ct": ct.hex(), "mac": mac}
+
+
+def unseal(key: bytes, env: Dict[str, str]) -> Optional[Dict[str, Any]]:
+    try:
+        nonce, ct = bytes.fromhex(env["nonce"]), bytes.fromhex(env["ct"])
+        mac = env["mac"]
+    except (KeyError, ValueError):
+        return None
+    want = hmac.new(key, nonce + ct, hashlib.sha256).hexdigest()
+    if not hmac.compare_digest(mac, want):
+        return None
+    ks = _keystream(key, nonce, len(ct))
+    raw = bytes(a ^ b for a, b in zip(ct, ks))
+    try:
+        return json.loads(raw.decode())
+    except (json.JSONDecodeError, UnicodeDecodeError):
+        return None

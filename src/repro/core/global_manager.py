@@ -1,0 +1,187 @@
+"""WI Global Manager (paper §4.1-4.3): the per-region broker.
+
+Logically centralized, physically distributed in production; here one object
+owning the bus (Kafka stand-in), the store (CloudDB stand-in), safety
+machinery, and the coordinator.  All hint traffic flows through it:
+
+  deployment hints  --register_workload/set_hints(scope=deployment)--> store+bus
+  runtime hints     --local managers publish to bus--> store (+opt managers)
+  platform hints    --opt managers publish--> bus --> local managers --> VMs
+
+Aggregation views (per-VM / per-server / per-rack / per-workload / region)
+are computed from the store on demand (§4.1 "aggregate it at multiple
+granularities").
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core import hints as H
+from repro.core.bus import Bus, Record
+from repro.core.coordinator import Coordinator
+from repro.core.envelope import KeyRegistry, seal, unseal
+from repro.core.safety import ConsistencyChecker, RateLimiter
+from repro.core.store import Store
+
+
+class GlobalManager:
+    def __init__(self, region: str = "region-0", bus: Optional[Bus] = None,
+                 store: Optional[Store] = None, clock=None, seed: int = 0,
+                 hint_rate_per_s: float = 10.0, hint_burst: float = 50.0):
+        self.region = region
+        self.clock = clock or (lambda: 0.0)
+        self.bus = bus or Bus(clock=self.clock)
+        self.store = store or Store()
+        self.keys = KeyRegistry()
+        self.coordinator = Coordinator(seed=seed, clock=self.clock)
+        self.checker = ConsistencyChecker(self.clock)
+        self._limits = {
+            H.Scope.DEPLOYMENT.value: RateLimiter(hint_rate_per_s, hint_burst,
+                                                  self.clock),
+            H.Scope.RUNTIME.value: RateLimiter(hint_rate_per_s, hint_burst,
+                                               self.clock),
+            "platform": RateLimiter(hint_rate_per_s * 10, hint_burst * 10,
+                                    self.clock),
+        }
+        self._seq = 0
+        self.stats = defaultdict(int)
+        # ingest runtime hints published by local managers
+        self.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_runtime_hint)
+
+    # -- workload lifecycle ---------------------------------------------------
+    def register_workload(self, workload: str,
+                          deployment_hints: Optional[Dict[str, Any]] = None,
+                          resources: Tuple[str, ...] = ("*",)) -> bytes:
+        key = self.keys.provision(workload)
+        self.store.put(f"workload/{workload}", {"resources": list(resources)})
+        if deployment_hints:
+            for r in resources:
+                self.set_hints(workload, r, deployment_hints,
+                               scope=H.Scope.DEPLOYMENT, source="deploy-api")
+        return key
+
+    # -- hint ingestion ---------------------------------------------------------
+    def set_hints(self, workload: str, resource: str, hint_dict: Dict[str, Any],
+                  scope: H.Scope = H.Scope.RUNTIME, source: str = "",
+                  envelope: Optional[Dict[str, str]] = None) -> bool:
+        """Returns True if accepted.  Rejections are counted + notified."""
+        if not self._limits[scope.value].allow((workload, source)):
+            self.stats["rejected_rate_limit"] += 1
+            return False
+        if envelope is not None:
+            key = self.keys.key_for(workload)
+            payload = unseal(key, envelope) if key else None
+            if payload is None:
+                self.stats["rejected_bad_envelope"] += 1
+                return False
+            hint_dict = payload
+        try:
+            hint_dict = H.validate_hints(hint_dict)
+        except H.HintError:
+            self.stats["rejected_invalid"] += 1
+            return False
+        verdict = self.checker.check(workload, resource, hint_dict)
+        if not verdict.accepted:
+            self.stats["rejected_inconsistent"] += 1
+            self.notify_workload(workload, resource, "hints_ignored",
+                                 {"reason": verdict.reason})
+            return False
+        self._seq += 1
+        rec = H.HintRecord(workload=workload, resource=resource,
+                           scope=scope.value, hints=hint_dict, source=source,
+                           seq=self._seq, ts=self.clock())
+        self.store.put(f"hints/{scope.value}/{workload}/{resource}",
+                       json.loads(rec.to_json()))
+        topic = (H.TOPIC_DEPLOY_HINTS if scope == H.Scope.DEPLOYMENT
+                 else H.TOPIC_RUNTIME_HINTS)
+        if scope == H.Scope.DEPLOYMENT:     # runtime hints already on the bus
+            self.bus.publish(topic, json.loads(rec.to_json()), key=workload)
+        self.stats["accepted"] += 1
+        return True
+
+    def _on_runtime_hint(self, rec: Record):
+        """Bus-side ingestion for hints published by local managers."""
+        d = rec.value
+        if not isinstance(d, dict) or "workload" not in d:
+            return
+        self.store.put(f"hints/runtime/{d['workload']}/{d['resource']}", d)
+
+    # -- hint retrieval -----------------------------------------------------
+    def effective_hints(self, workload: str, resource: str = "*"
+                        ) -> Dict[str, Any]:
+        """Conservative defaults <- deployment hints <- runtime hints."""
+        out = dict(H.CONSERVATIVE)
+        for scope in ("deployment", "runtime"):
+            for res in ("*", resource):
+                d = self.store.get(f"hints/{scope}/{workload}/{res}")
+                if d and not H.HintRecord(**d).expired(self.clock()):
+                    out.update({k: v for k, v in d["hints"].items()
+                                if k in H.CONSERVATIVE or k.startswith("x-")})
+        return out
+
+    def raw_hints(self, workload: str) -> List[Dict[str, Any]]:
+        return [v for _, v in self.store.scan("hints/")
+                if v.get("workload") == workload]
+
+    # -- aggregation (§4.1) ----------------------------------------------------
+    def aggregate(self, level: str = "server") -> Dict[str, Dict[str, Any]]:
+        """Aggregate numeric hints by resource prefix.
+
+        Resources are hierarchical: 'rack/server/vm'.  level in
+        {'vm','server','rack','workload','region'}.
+        """
+        buckets: Dict[str, List[Dict[str, Any]]] = defaultdict(list)
+        for k, v in self.store.scan("hints/"):
+            res = v.get("resource", "*")
+            wl = v.get("workload", "?")
+            parts = res.split("/") if res != "*" else []
+            if level == "workload":
+                key = wl
+            elif level == "region":
+                key = self.region
+            elif level == "rack":
+                key = parts[0] if parts else "*"
+            elif level == "server":
+                key = "/".join(parts[:2]) if len(parts) >= 2 else res
+            else:
+                key = res
+            buckets[key].append(H.effective(v.get("hints", {})))
+        out = {}
+        for k, hs in buckets.items():
+            agg: Dict[str, Any] = {"n": len(hs)}
+            for hk in H.HINT_KEYS:
+                vals = [h[hk] for h in hs]
+                if isinstance(H.CONSERVATIVE[hk], bool):
+                    agg[hk + "_frac"] = sum(bool(v) for v in vals) / len(vals)
+                else:
+                    agg[hk + "_min"] = min(vals)
+                    agg[hk + "_mean"] = sum(vals) / len(vals)
+            out[k] = agg
+        return out
+
+    # -- platform -> workload ---------------------------------------------------
+    def publish_platform_hint(self, ph: H.PlatformHint) -> bool:
+        if not self._limits["platform"].allow((ph.source_opt,)):
+            self.stats["platform_rate_limited"] += 1
+            return False
+        self._seq += 1
+        d = json.loads(ph.to_json())
+        d["seq"] = self._seq
+        d["ts"] = self.clock()
+        self.store.put(f"events/{ph.workload}/{ph.resource}/{self._seq}", d)
+        self.bus.publish(H.TOPIC_PLATFORM_HINTS, d, key=ph.resource)
+        self.stats["platform_hints"] += 1
+        return True
+
+    def notify_workload(self, workload: str, resource: str, kind: str,
+                        payload: Dict[str, Any]):
+        self.publish_platform_hint(H.PlatformHint(
+            event=kind, workload=workload, resource=resource,
+            payload=payload, source_opt="global-manager"))
+
+    def events_for(self, workload: str, since_seq: int = 0
+                   ) -> List[Dict[str, Any]]:
+        return [v for _, v in self.store.scan(f"events/{workload}/")
+                if v["seq"] > since_seq]

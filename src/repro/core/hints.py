@@ -1,0 +1,159 @@
+"""Workload Intelligence hint schema (paper §4).
+
+Seven workload->platform hints, exactly the paper's set:
+  scale_up_down (bool), scale_out_in (bool), deploy_time_ms (float),
+  availability_nines (float), preemptibility_pct (float),
+  delay_tolerance_ms (float), region_independent (bool)
+
+Hints are *best-effort* and *incentive-compatible*: an absent hint means the
+platform assumes the most conservative value (CONSERVATIVE below), so not
+adopting WI can never hurt a workload (§3.1 Incentives).
+
+Platform->workload hints (§4, "Platform hints"): eviction notices, harvest /
+overclock offers, throttle and maintenance events.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+SCHEMA_VERSION = 1
+
+# The seven hint keys (Table 3 columns).
+HINT_KEYS = (
+    "scale_up_down",        # bool: can shrink/expand resources in place
+    "scale_out_in",         # bool: can add/remove replicas
+    "deploy_time_ms",       # float: tolerated deployment latency
+    "availability_nines",   # float: required availability (9s)
+    "preemptibility_pct",   # float 0..100: % of capacity that may be evicted
+    "delay_tolerance_ms",   # float: tolerated added latency/step slack
+    "region_independent",   # bool: may migrate across regions
+)
+
+# Conservative defaults assumed when a hint is absent (§4: "If unspecified,
+# we assume the most conservative setting").
+CONSERVATIVE: Dict[str, Any] = {
+    "scale_up_down": False,
+    "scale_out_in": False,
+    "deploy_time_ms": 0.0,          # needs instant deployment
+    "availability_nines": 5.0,      # five nines
+    "preemptibility_pct": 0.0,      # nothing may be evicted
+    "delay_tolerance_ms": 0.0,      # delay sensitive
+    "region_independent": False,
+}
+
+_VALIDATORS = {
+    "scale_up_down": lambda v: isinstance(v, bool),
+    "scale_out_in": lambda v: isinstance(v, bool),
+    "deploy_time_ms": lambda v: isinstance(v, (int, float)) and 0 <= v <= 1e9,
+    "availability_nines": lambda v: isinstance(v, (int, float)) and 0 <= v <= 9,
+    "preemptibility_pct": lambda v: isinstance(v, (int, float))
+    and 0 <= v <= 100,
+    "delay_tolerance_ms": lambda v: isinstance(v, (int, float))
+    and 0 <= v <= 1e9,
+    "region_independent": lambda v: isinstance(v, bool),
+}
+
+
+class HintError(ValueError):
+    pass
+
+
+def validate_hints(hints: Dict[str, Any], allow_extension=True):
+    """Schema validation.  Unknown keys are allowed when the deployment
+    registered an extension schema (§3.1 Generality/extensible) but must be
+    namespaced 'x-'."""
+    for k, v in hints.items():
+        if k in _VALIDATORS:
+            if not _VALIDATORS[k](v):
+                raise HintError(f"invalid value for hint {k!r}: {v!r}")
+        elif allow_extension and k.startswith("x-"):
+            continue
+        else:
+            raise HintError(f"unknown hint key {k!r}")
+    return dict(hints)
+
+
+def effective(hints: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+    """Hints merged over conservative defaults."""
+    out = dict(CONSERVATIVE)
+    if hints:
+        out.update({k: v for k, v in hints.items() if k in _VALIDATORS})
+    return out
+
+
+class Scope(enum.Enum):
+    DEPLOYMENT = "deployment"   # set at deploy time via the deployment API
+    RUNTIME = "runtime"         # set from inside the VM / by a workload manager
+
+
+@dataclass(frozen=True)
+class HintRecord:
+    """One hint assertion for one resource (VM / replica slice / workload)."""
+    workload: str
+    resource: str               # vm id or "*" for workload-wide
+    scope: str                  # Scope value
+    hints: Dict[str, Any]
+    source: str = ""            # who set it (vm-local, yarn-rm, deploy-api...)
+    seq: int = 0                # assigned by the global manager
+    ts: float = 0.0
+    ttl_s: Optional[float] = None
+    version: int = SCHEMA_VERSION
+
+    def expired(self, now=None) -> bool:
+        if self.ttl_s is None:
+            return False
+        return (now if now is not None else time.time()) > self.ts + self.ttl_s
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "HintRecord":
+        return HintRecord(**json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Platform -> workload hints (events)
+# ---------------------------------------------------------------------------
+
+class PlatformEvent(enum.Enum):
+    EVICTION_NOTICE = "eviction_notice"       # Spot: VM will be evicted
+    SCALE_DOWN_NOTICE = "scale_down_notice"   # Harvest/MA: resources shrink
+    SCALE_UP_OFFER = "scale_up_offer"         # Harvest: spare resources
+    OVERCLOCK_OFFER = "overclock_offer"
+    UNDERCLOCK_NOTICE = "underclock_notice"
+    THROTTLE_NOTICE = "throttle_notice"       # MA DC power event
+    MAINTENANCE = "maintenance"
+    MIGRATION_NOTICE = "migration_notice"     # region-agnostic placement
+    RIGHTSIZE_RECOMMENDATION = "rightsize_recommendation"
+    PREPROVISION_STATUS = "preprovision_status"
+
+
+@dataclass(frozen=True)
+class PlatformHint:
+    event: str                  # PlatformEvent value
+    workload: str
+    resource: str
+    deadline_s: float = 0.0     # how long the workload has to react
+    payload: Dict[str, Any] = field(default_factory=dict)
+    source_opt: str = ""        # which optimization manager issued it
+    seq: int = 0
+    ts: float = 0.0
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "PlatformHint":
+        return PlatformHint(**json.loads(s))
+
+
+# Topics on the bus (§4.2: Kafka topics).
+TOPIC_DEPLOY_HINTS = "wi.hints.deploy"
+TOPIC_RUNTIME_HINTS = "wi.hints.runtime"
+TOPIC_PLATFORM_HINTS = "wi.hints.platform"

@@ -1,0 +1,122 @@
+"""WI Local Manager (paper §4.1): one per server.
+
+Collects runtime hints from the VMs on its server through a guest/host
+channel (Hyper-V KVP / XenStore stand-in: ``VMEndpoint``), rate-limits and
+forwards them onto the bus; subscribes to platform hints and exposes them to
+VMs through the metadata-service + scheduled-events interfaces the paper
+cites (§4.2).
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict, deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import hints as H
+from repro.core.bus import Bus, Record
+from repro.core.safety import RateLimiter
+
+
+class VMEndpoint:
+    """What a workload sees from inside its VM.
+
+    set_runtime_hints  — KVP/XenStore-style write (rate limited at the host)
+    metadata           — metadata-service style attribute read
+    scheduled_events   — poll upcoming platform events (eviction, throttle…)
+    ack_event          — acknowledge a scheduled event (graceful shutdown)
+    on_event           — optional push callback
+    """
+
+    def __init__(self, vm_id: str, workload: str, local: "LocalManager"):
+        self.vm_id, self.workload, self._local = vm_id, workload, local
+        self._events: deque = deque(maxlen=256)
+        self._acked: set = set()
+        self._cb: Optional[Callable[[Dict[str, Any]], None]] = None
+        self.metadata: Dict[str, Any] = {"vm_id": vm_id, "workload": workload}
+
+    def set_runtime_hints(self, hint_dict: Dict[str, Any]) -> bool:
+        return self._local._vm_hint(self.vm_id, self.workload, hint_dict)
+
+    def scheduled_events(self) -> List[Dict[str, Any]]:
+        return [e for e in self._events if e["seq"] not in self._acked]
+
+    def ack_event(self, seq: int):
+        self._acked.add(seq)
+        self._local._event_acked(self.vm_id, seq)
+
+    def on_event(self, cb: Callable[[Dict[str, Any]], None]):
+        self._cb = cb
+
+    def _deliver(self, event: Dict[str, Any]):
+        self._events.append(event)
+        if self._cb:
+            self._cb(event)
+
+
+class LocalManager:
+    def __init__(self, server_id: str, bus: Bus, clock=None,
+                 vm_hint_rate_per_s: float = 2.0, vm_hint_burst: float = 10.0):
+        self.server_id = server_id
+        self.bus = bus
+        self.clock = clock or (lambda: 0.0)
+        self._vms: Dict[str, VMEndpoint] = {}
+        self._limiter = RateLimiter(vm_hint_rate_per_s, vm_hint_burst,
+                                    self.clock)
+        self.stats = defaultdict(int)
+        self._acks: Dict[int, set] = defaultdict(set)
+        bus.subscribe(H.TOPIC_PLATFORM_HINTS, self._on_platform_hint)
+
+    # -- VM lifecycle -------------------------------------------------------
+    def attach_vm(self, vm_id: str, workload: str) -> VMEndpoint:
+        ep = VMEndpoint(vm_id, workload, self)
+        self._vms[vm_id] = ep
+        return ep
+
+    def detach_vm(self, vm_id: str):
+        self._vms.pop(vm_id, None)
+
+    # -- guest -> platform ------------------------------------------------------
+    def _vm_hint(self, vm_id: str, workload: str,
+                 hint_dict: Dict[str, Any]) -> bool:
+        if not self._limiter.allow((vm_id,)):
+            self.stats["vm_hint_rate_limited"] += 1
+            return False
+        try:
+            hint_dict = H.validate_hints(hint_dict)
+        except H.HintError:
+            self.stats["vm_hint_invalid"] += 1
+            return False
+        resource = f"{self.server_id}/{vm_id}"
+        rec = H.HintRecord(workload=workload, resource=resource,
+                           scope=H.Scope.RUNTIME.value, hints=hint_dict,
+                           source=f"vm:{vm_id}", ts=self.clock())
+        self.bus.publish(H.TOPIC_RUNTIME_HINTS, json.loads(rec.to_json()),
+                         key=resource)
+        self.stats["vm_hints_forwarded"] += 1
+        return True
+
+    # -- platform -> guest -------------------------------------------------------
+    def _on_platform_hint(self, rec: Record):
+        d = rec.value
+        res = d.get("resource", "")
+        # resource is 'server/vm' or 'server' or '*'
+        if res == "*" or res == self.server_id:
+            targets = list(self._vms.values())
+        elif res.startswith(self.server_id + "/"):
+            vm = res[len(self.server_id) + 1:]
+            targets = [self._vms[vm]] if vm in self._vms else []
+        else:
+            # workload-addressed events go to that workload's VMs here
+            targets = [ep for ep in self._vms.values()
+                       if ep.workload == d.get("workload")] \
+                if res == "" else []
+        for ep in targets:
+            ep._deliver(d)
+            self.stats["events_delivered"] += 1
+
+    def _event_acked(self, vm_id: str, seq: int):
+        self._acks[seq].add(vm_id)
+        self.stats["events_acked"] += 1
+
+    def acked(self, seq: int) -> set:
+        return self._acks.get(seq, set())

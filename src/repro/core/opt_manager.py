@@ -1,0 +1,77 @@
+"""Optimization-manager base (paper §4.1 right side, §5.2, Table 5).
+
+Onboarding an optimization = define (1) managed resource, (2) priority
+(Table 4 — keyed by ``name`` into pricing.PRIORITY), (3) owner benefit,
+(4) pricing, (5) cost model (pricing.PRICING), plus the Table-5 contract:
+which hints it consumes (pull via the store / push via bus subscription) and
+which platform hints it publishes.
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Dict, Iterable, List, Optional
+
+from repro.core import hints as H
+from repro.core.coordinator import Claim
+from repro.core.global_manager import GlobalManager
+from repro.core.pricing import PRICING, PRIORITY, applicable
+
+
+class OptimizationManager:
+    name: str = "base"
+    consumes_deploy: tuple = ()
+    consumes_runtime: tuple = ()
+    publishes: tuple = ()
+
+    def __init__(self, gm: GlobalManager):
+        assert self.name in PRIORITY, self.name
+        self.gm = gm
+        self.stats = defaultdict(int)
+        self._group = f"opt:{self.name}"
+        # push subscriptions for runtime hints this optimization reacts to
+        if self.consumes_runtime:
+            gm.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_runtime_hint)
+
+    # -- hint access -------------------------------------------------------
+    def applicable_workloads(self, workloads: Iterable[str]) -> List[str]:
+        return [w for w in workloads
+                if applicable(self.name, self.gm.effective_hints(w))]
+
+    def hints_for(self, workload: str, resource: str = "*") -> Dict[str, Any]:
+        return self.gm.effective_hints(workload, resource)
+
+    def poll_runtime_hints(self, max_records=100):
+        return self.gm.bus.poll(H.TOPIC_RUNTIME_HINTS, self._group,
+                                max_records)
+
+    def _on_runtime_hint(self, rec):
+        d = rec.value
+        if any(k in d.get("hints", {}) for k in self.consumes_runtime):
+            self.on_runtime_hint(d)
+
+    def on_runtime_hint(self, hint_record: Dict[str, Any]):
+        """Override: react to a runtime hint push."""
+
+    # -- actions ------------------------------------------------------------
+    def notify(self, event: H.PlatformEvent, workload: str, resource: str,
+               deadline_s: float = 0.0, **payload):
+        ok = self.gm.publish_platform_hint(H.PlatformHint(
+            event=event.value, workload=workload, resource=resource,
+            deadline_s=deadline_s, payload=payload, source_opt=self.name))
+        self.stats["notices" if ok else "notices_rate_limited"] += 1
+        return ok
+
+    def claim(self, workload: str, resource: str, amount: float,
+              compressible: bool):
+        return Claim(opt=self.name, workload=workload, resource=resource,
+                     amount=amount, compressible=compressible,
+                     ts=self.gm.clock())
+
+    @property
+    def pricing(self):
+        return PRICING[self.name]
+
+    @property
+    def priority(self) -> int:
+        return PRIORITY[self.name]

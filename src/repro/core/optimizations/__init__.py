@@ -1,0 +1,25 @@
+"""The ten cloud-platform optimizations (paper §2.2, Tables 2/3/5).
+
+Each manager implements the Table-5 contract against the WI global manager;
+the cluster simulator (repro.sim) drives them against simulated servers and
+the WI-JAX runtime (repro.runtime) drives spot/harvest/autoscale against real
+training jobs.
+"""
+from repro.core.optimizations.managers import (AutoScalingManager,
+                                               HarvestManager,
+                                               MADatacenterManager,
+                                               NonPreprovisionManager,
+                                               OverclockingManager,
+                                               OversubscriptionManager,
+                                               RegionAgnosticManager,
+                                               RightsizingManager,
+                                               SpotManager,
+                                               UnderclockingManager,
+                                               ALL_OPTIMIZATIONS)
+
+__all__ = [
+    "AutoScalingManager", "HarvestManager", "MADatacenterManager",
+    "NonPreprovisionManager", "OverclockingManager",
+    "OversubscriptionManager", "RegionAgnosticManager", "RightsizingManager",
+    "SpotManager", "UnderclockingManager", "ALL_OPTIMIZATIONS",
+]

@@ -1,0 +1,155 @@
+"""Pricing & benefit models for the ten optimizations (paper Table 2).
+
+Each optimization has: the resource it manages, the average user benefit
+(relative cost multiplier vs a Regular VM), min/max pricing anchors, and the
+platform benefit model.  These are the paper's published numbers — the §6.4
+provider-scale reproduction (sim/provider_scale.py) must recover the 48.8%
+average saving from them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Tuple
+
+REGULAR_PRICE = 1.0     # normalized $/core-hour
+
+
+@dataclass(frozen=True)
+class OptPricing:
+    name: str
+    resource: str                   # what it manages (Table 2 "Cloud Resources")
+    user_benefit: float             # average fractional cost saving (Table 2)
+    price_multiplier: float         # price paid vs Regular when enabled
+    platform_benefit: str
+    carbon_benefit: float = 0.0     # fractional carbon saving when enabled
+    perf_benefit: float = 0.0       # fractional perf gain (overclocking)
+
+
+# Table 2 rows.  price_multiplier = 1 - user_benefit on average.
+PRICING: Dict[str, OptPricing] = {p.name: p for p in [
+    OptPricing("auto_scaling", "compute", 0.19, 0.81, "compute allocation",
+               carbon_benefit=0.19),
+    OptPricing("spot", "spare_compute", 0.85, 0.15, "compute allocation"),
+    OptPricing("harvest", "spare_compute", 0.91, 0.09, "compute allocation"),
+    OptPricing("overclocking", "cpu_frequency", 0.11, 0.89,
+               "reliability, power/energy", perf_benefit=0.11),
+    OptPricing("underclocking", "cpu_frequency", 0.01, 0.99, "power, energy",
+               carbon_benefit=0.01),
+    OptPricing("non_preprovision", "spare_compute", 0.02, 0.98,
+               "compute allocation"),
+    OptPricing("region_agnostic", "compute", 0.22, 0.78, "efficient region",
+               carbon_benefit=0.51),
+    OptPricing("oversubscription", "compute", 0.15, 0.85,
+               "compute allocation", carbon_benefit=0.15),
+    OptPricing("rightsizing", "compute", 0.50, 0.50, "compute allocation",
+               carbon_benefit=0.50),
+    OptPricing("ma_datacenters", "cpu_frequency", 0.40, 0.60,
+               "infrastructure cost"),
+]}
+
+# Priorities (Table 4): 0 = highest (on-demand).
+PRIORITY: Dict[str, int] = {
+    "on_demand": 0,
+    "ma_datacenters": 1,
+    "rightsizing": 2,
+    "oversubscription": 3,
+    "auto_scaling": 4,
+    "non_preprovision": 5,
+    "region_agnostic": 6,
+    "underclocking": 7,
+    "overclocking": 8,
+    "spot": 9,
+    "harvest": 10,
+}
+
+# §6.4: optimizations that contend and cannot stack multiplicatively.
+CONFLICT_SETS: Tuple[FrozenSet[str], ...] = (
+    frozenset({"spot", "harvest", "non_preprovision"}),      # spare compute
+    frozenset({"overclocking", "underclocking", "ma_datacenters"}),  # CPU freq
+)
+
+# Table 3: required workload characteristics per optimization.
+# (hint key, predicate) — all must hold for the optimization to apply.
+REQUIREMENTS = {
+    "auto_scaling": [("scale_out_in", lambda v: v is True),
+                     ("delay_tolerance_ms", lambda v: v > 0)],
+    "spot": [("preemptibility_pct", lambda v: v >= 20.0)],
+    "harvest": [("scale_up_down", lambda v: v is True),
+                ("preemptibility_pct", lambda v: v >= 20.0),
+                ("delay_tolerance_ms", lambda v: v > 0)],
+    "overclocking": [("scale_up_down", lambda v: v is True),
+                     ("delay_tolerance_ms", lambda v: v > 0)],
+    "underclocking": [("scale_up_down", lambda v: v is True),
+                      ("delay_tolerance_ms", lambda v: v > 0)],
+    "non_preprovision": [("deploy_time_ms", lambda v: v >= 60_000)],
+    "region_agnostic": [("region_independent", lambda v: v is True)],
+    "oversubscription": [("delay_tolerance_ms", lambda v: v > 0)],
+    "rightsizing": [("availability_nines", lambda v: v <= 4.0),
+                    ("scale_up_down", lambda v: v is True)],
+    "ma_datacenters": [("availability_nines", lambda v: v <= 3.0)],
+}
+
+
+def applicable(opt: str, eff_hints: Dict) -> bool:
+    return all(pred(eff_hints.get(key)) for key, pred in REQUIREMENTS[opt])
+
+
+def applicable_set(eff_hints: Dict) -> Tuple[str, ...]:
+    return tuple(o for o in PRICING if applicable(o, eff_hints))
+
+
+def combined_price(opts) -> float:
+    """Price multiplier for a set of enabled optimizations.
+
+    Within each conflict set only the single best (cheapest) optimization
+    applies (§6.4); independent optimizations stack multiplicatively.
+    """
+    opts = set(opts)
+    mult = 1.0
+    for cs in CONFLICT_SETS:
+        inter = opts & cs
+        if inter:
+            best = min(inter, key=lambda o: PRICING[o].price_multiplier)
+            mult *= PRICING[best].price_multiplier
+            opts -= cs
+    for o in opts:
+        mult *= PRICING[o].price_multiplier
+    return mult
+
+
+def combined_carbon(opts) -> float:
+    """Fractional carbon saving for a set of optimizations (independent
+    savings compose as products of remainders)."""
+    opts = set(opts)
+    keep = 1.0
+    chosen = []
+    for cs in CONFLICT_SETS:
+        inter = opts & cs
+        if inter:
+            best = max(inter, key=lambda o: PRICING[o].carbon_benefit)
+            chosen.append(best)
+            opts -= cs
+    chosen.extend(opts)
+    for o in chosen:
+        keep *= 1.0 - PRICING[o].carbon_benefit
+    return 1.0 - keep
+
+
+class CostMeter:
+    """Accumulates core-hours x price for a workload (case studies)."""
+
+    def __init__(self):
+        self.core_hours = 0.0
+        self.cost = 0.0
+        self.regular_cost = 0.0
+
+    def charge(self, cores: float, hours: float, opts=()):
+        self.core_hours += cores * hours
+        self.cost += cores * hours * REGULAR_PRICE * combined_price(opts)
+        self.regular_cost += cores * hours * REGULAR_PRICE
+
+    @property
+    def saving(self) -> float:
+        if self.regular_cost == 0:
+            return 0.0
+        return 1.0 - self.cost / self.regular_cost

@@ -1,0 +1,129 @@
+"""Safety machinery (paper §4.3).
+
+  * Token-bucket rate limiting *per interface x per workload x per
+    optimization* ("we enforce maximum rates ... for all interfaces
+    separately") — DoS protection.
+  * History-based consistency checking: hints that flip-flop implausibly
+    fast or contradict observed behaviour are ignored and the workload is
+    notified ("the cloud platform ignores any inconsistent/incompatible
+    hints based on history").
+  * Fair-share accounting across workloads for compressible resources.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class RateLimiter:
+    """Token bucket per (interface, principal)."""
+
+    def __init__(self, rate_per_s: float, burst: float,
+                 clock: Callable[[], float]):
+        self.rate = rate_per_s
+        self.burst = burst
+        self._clock = clock
+        self._state: Dict[Any, Tuple[float, float]] = {}  # key -> (tokens, ts)
+
+    def allow(self, key) -> bool:
+        now = self._clock()
+        tokens, ts = self._state.get(key, (self.burst, now))
+        tokens = min(self.burst, tokens + (now - ts) * self.rate)
+        if tokens >= 1.0:
+            self._state[key] = (tokens - 1.0, now)
+            return True
+        self._state[key] = (tokens, now)
+        return False
+
+
+@dataclass
+class ConsistencyVerdict:
+    accepted: bool
+    reason: str = ""
+
+
+class ConsistencyChecker:
+    """Rejects implausible hint updates based on history.
+
+    Rules (conservative, per §4.3):
+      * flip-flop: a boolean/threshold hint may not change direction more
+        than ``max_flips`` times within ``window_s`` seconds;
+      * contradiction: preemptibility_pct may not *rise* while an eviction
+        issued under the previous value is still pending acknowledgement
+        (prevents gaming eviction choice mid-flight);
+      * magnitude: numeric hints may not change by more than
+        ``max_jump`` x the historical span in one update.
+    """
+
+    def __init__(self, clock, window_s=60.0, max_flips=4, max_jump=100.0):
+        self._clock = clock
+        self.window_s, self.max_flips, self.max_jump = (window_s, max_flips,
+                                                        max_jump)
+        self._hist: Dict[Tuple[str, str], collections.deque] = \
+            collections.defaultdict(lambda: collections.deque(maxlen=64))
+        self._pending_evictions: set = set()
+
+    def note_eviction_pending(self, resource: str):
+        self._pending_evictions.add(resource)
+
+    def note_eviction_done(self, resource: str):
+        self._pending_evictions.discard(resource)
+
+    def check(self, workload: str, resource: str,
+              hints: Dict[str, Any]) -> ConsistencyVerdict:
+        now = self._clock()
+        for k, v in hints.items():
+            h = self._hist[(workload, resource, k)]
+            recent = [(t, old) for (t, old) in h if now - t <= self.window_s]
+            # flip-flop detection: count direction changes in the window
+            seq = [old for _, old in recent] + [v]
+            flips = 0
+            if all(isinstance(s, bool) for s in seq):
+                flips = sum(int(a != b) for a, b in zip(seq, seq[1:]))
+            elif all(isinstance(s, (int, float)) for s in seq) and len(seq) > 2:
+                dirs = [1 if b > a else (-1 if b < a else 0)
+                        for a, b in zip(seq, seq[1:]) if b != a]
+                flips = sum(int(a != b) for a, b in zip(dirs, dirs[1:]))
+            if flips > self.max_flips:
+                return ConsistencyVerdict(False, f"flip-flop on {k}")
+            # contradiction: raising preemptibility during pending eviction
+            if (k == "preemptibility_pct" and resource
+                    in self._pending_evictions and recent
+                    and v > recent[-1][1]):
+                return ConsistencyVerdict(
+                    False, "preemptibility raised during pending eviction")
+            # magnitude jumps
+            if (isinstance(v, (int, float)) and not isinstance(v, bool)
+                    and recent):
+                vals = [old for _, old in recent
+                        if isinstance(old, (int, float))]
+                if vals:
+                    span = max(max(vals) - min(vals), 1e-9)
+                    if abs(v - vals[-1]) > self.max_jump * max(span, 1.0):
+                        return ConsistencyVerdict(False,
+                                                  f"implausible jump on {k}")
+        for k, v in hints.items():
+            self._hist[(workload, resource, k)].append((now, v))
+        return ConsistencyVerdict(True)
+
+
+class FairShare:
+    """Max-min fair allocation of a compressible resource (§4.4 Fig 3)."""
+
+    @staticmethod
+    def allocate(capacity: float, demands: Dict[str, float]
+                 ) -> Dict[str, float]:
+        """Water-filling: sort by demand; every unsatisfied claimant gets an
+        equal share of what remains, capped at its demand."""
+        if not demands:
+            return {}
+        alloc = {k: 0.0 for k in demands}
+        cap = capacity
+        for i, (k, d) in enumerate(sorted(demands.items(),
+                                          key=lambda kv: kv[1])):
+            n_left = len(demands) - i
+            share = min(d, cap / n_left)
+            alloc[k] = share
+            cap -= share
+        return alloc

@@ -1,0 +1,137 @@
+"""CloudDB stand-in: a durable KV store with WAL + snapshot recovery (§4.2).
+
+Guarantees the paper needs from "CloudDB":
+  * durability: every committed write survives process crash (WAL fsync'd),
+  * recovery: state after restart == snapshot + WAL replay (prefix of the
+    write sequence; torn tail writes are discarded),
+  * versioned values (monotonic seq) so optimization managers can do
+    consistent pull reads,
+  * range scans by key prefix (aggregation queries).
+
+Property-tested in tests/test_wi_store.py: crash at any WAL byte prefix
+recovers a prefix of committed writes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+
+class Store:
+    def __init__(self, root: Optional[str] = None, snapshot_every: int = 256,
+                 fsync: bool = False):
+        self._mem: Dict[str, Tuple[int, Any]] = {}
+        self._seq = 0
+        self._lock = threading.RLock()
+        self._root = Path(root) if root else None
+        self._snapshot_every = snapshot_every
+        self._writes_since_snap = 0
+        self._fsync = fsync
+        self._wal = None
+        if self._root:
+            self._root.mkdir(parents=True, exist_ok=True)
+            self._recover()
+            self._wal = (self._root / "wal.log").open("a")
+
+    # -- recovery ------------------------------------------------------------
+    def _recover(self):
+        snap = self._root / "snapshot.json"
+        if snap.exists():
+            try:
+                data = json.loads(snap.read_text())
+                self._mem = {k: (v[0], v[1]) for k, v in data["kv"].items()}
+                self._seq = data["seq"]
+            except (json.JSONDecodeError, KeyError):
+                self._mem, self._seq = {}, 0
+        wal = self._root / "wal.log"
+        if wal.exists():
+            with wal.open() as fh:
+                for line in fh:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        break       # torn tail: stop replay
+                    if rec["seq"] <= self._seq:
+                        continue    # already in snapshot
+                    if rec["op"] == "put":
+                        self._mem[rec["key"]] = (rec["seq"], rec["val"])
+                    elif rec["op"] == "del":
+                        self._mem.pop(rec["key"], None)
+                    self._seq = rec["seq"]
+
+    def _append_wal(self, rec: dict):
+        if self._wal is None:
+            return
+        self._wal.write(json.dumps(rec) + "\n")
+        self._wal.flush()
+        if self._fsync:
+            os.fsync(self._wal.fileno())
+        self._writes_since_snap += 1
+        if self._writes_since_snap >= self._snapshot_every:
+            self._snapshot()
+
+    def _snapshot(self):
+        if self._root is None:
+            return
+        tmp = self._root / "snapshot.json.tmp"
+        tmp.write_text(json.dumps(
+            {"seq": self._seq,
+             "kv": {k: list(v) for k, v in self._mem.items()}}))
+        os.replace(tmp, self._root / "snapshot.json")
+        # truncate WAL (atomically recreate)
+        if self._wal is not None:
+            self._wal.close()
+        (self._root / "wal.log").write_text("")
+        self._wal = (self._root / "wal.log").open("a")
+        self._writes_since_snap = 0
+
+    # -- API -----------------------------------------------------------------
+    def put(self, key: str, value: Any) -> int:
+        with self._lock:
+            self._seq += 1
+            self._mem[key] = (self._seq, value)
+            self._append_wal({"op": "put", "key": key, "val": value,
+                              "seq": self._seq})
+            return self._seq
+
+    def get(self, key: str, default=None) -> Any:
+        with self._lock:
+            v = self._mem.get(key)
+            return v[1] if v else default
+
+    def get_versioned(self, key: str) -> Optional[Tuple[int, Any]]:
+        with self._lock:
+            return self._mem.get(key)
+
+    def delete(self, key: str):
+        with self._lock:
+            if key in self._mem:
+                self._seq += 1
+                del self._mem[key]
+                self._append_wal({"op": "del", "key": key, "seq": self._seq})
+
+    def scan(self, prefix: str) -> Iterator[Tuple[str, Any]]:
+        with self._lock:
+            items = [(k, v[1]) for k, v in self._mem.items()
+                     if k.startswith(prefix)]
+        return iter(sorted(items))
+
+    def count(self, prefix: str = "") -> int:
+        with self._lock:
+            return sum(1 for k in self._mem if k.startswith(prefix))
+
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+    def close(self):
+        with self._lock:
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None

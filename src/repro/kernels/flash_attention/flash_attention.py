@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native adaptation (HARDWARE ADAPTATION note, DESIGN.md): instead of the
+CUDA warp-level layout, tiling follows the TPU memory hierarchy — HBM
+operands are carved into VMEM blocks by BlockSpecs; the MXU consumes
+(R*CQ, hd) x (hd, CK) tiles (dims padded to lane multiples of 128 by the
+caller); the online-softmax running state (m, l, acc) lives in VMEM scratch
+that persists across the *sequential* innermost grid dimension (kv chunks) —
+the Pallas/TPU idiom replacing CUDA's shared-memory accumulators.
+
+Grid: (B*K, nq, nk); one program instance processes the (q-chunk i,
+kv-chunk j) tile for one (batch, kv-head) pair, all R grouped query heads
+folded into rows (row = r*CQ + qi).
+
+Supports: causal masking, sliding window, logit soft-capping, GQA.
+The backward pass reuses the pure-JAX chunked VJP (ops.py) — recomputation
+there matches this kernel's forward exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import numpy as np
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, softcap, cq, ck, nk, r):
+    i = pl.program_id(1)          # q chunk
+    j = pl.program_id(2)          # kv chunk
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]                # [R*CQ, hd]
+    k = k_ref[...]                # [CK, hd]
+    v = v_ref[...]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    # row -> q position (R heads folded: row = r*CQ + qi)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    qpos = i * cq + rows % cq
+    kpos = j * ck + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]           # [R*CQ, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, scale, causal=True, window=None,
+                        softcap=None, q_chunk=512, kv_chunk=512,
+                        interpret=False):
+    """q [G, S, R, hd]; k/v [G, S, hd] (G = batch*kv_heads) -> [G, S, R, hd].
+
+    The caller (ops.py) folds batch and kv-heads into G and grouped query
+    heads into R.
+    """
+    G, S, R, hd = q.shape
+    cq = min(q_chunk, S)
+    ck = min(kv_chunk, k.shape[1])
+    assert S % cq == 0 and k.shape[1] % ck == 0
+    nq, nk = S // cq, k.shape[1] // ck
+    # fold (R, CQ) into rows: [G, nq, R*CQ, hd] row = r*cq + qi
+    qr = q.transpose(0, 2, 1, 3).reshape(G, R, nq, cq, hd) \
+        .transpose(0, 2, 1, 3, 4).reshape(G, nq, R * cq, hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        cq=cq, ck=ck, nk=nk, r=R)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, None, R * cq, hd),
+                         lambda g, i, j: (g, i, 0, 0)),
+            pl.BlockSpec((None, ck, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((None, ck, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, R * cq, hd),
+                               lambda g, i, j: (g, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, nq, R * cq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R * cq, 1), jnp.float32),
+            pltpu.VMEM((R * cq, 1), jnp.float32),
+            pltpu.VMEM((R * cq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k, v)
+    # unfold rows
+    out = out.reshape(G, nq, R, cq, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(G, R, S, hd).transpose(0, 2, 1, 3)
+    return out

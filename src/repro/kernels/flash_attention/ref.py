@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+The reference is the dense attention used by every smoke test, plus the
+chunked pure-JAX flash (already validated against dense incl. gradients).
+"""
+from repro.configs.base import AttnConfig
+from repro.models.layers.attention import dense_attention
+
+
+def reference(q, k, v, cfg: AttnConfig):
+    return dense_attention(q, k, v, cfg)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle: the associative-scan RG-LRU from the model layer
+(validated against the sequential step in tests)."""
+from repro.models.layers.rglru import rglru_scan, rglru_step
+
+
+def reference(x_gated, log_a):
+    h, _ = rglru_scan(x_gated, log_a)
+    return h

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence  [arXiv:2402.19427].
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t   (per channel, diagonal)
+
+TPU adaptation: the recurrence is *diagonal*, so there is no MXU work — this
+is a VPU (vector-unit) kernel and it is memory-bound.  The Griffin paper
+makes the same observation and implements the scan *sequentially* on TPU
+(Appendix: "linear scan"), which beats associative-scan lowering because
+the bottleneck is HBM traffic, not the O(S) dependency chain.  We follow
+that design: channels map to lanes (blocks of W channels), sequence blocks
+map to the sequential innermost grid dim with the carry h in VMEM scratch,
+and inside a block a ``fori_loop`` walks time steps with pure VPU ops.
+A log-space closed form (two cumsums) was rejected: cumulative decays reach
+exp(+-8*L) inside a block and overflow f32 (documented trade-off).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, loga_ref, y_ref, h_scr):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[...].astype(jnp.float32)          # [L, W]
+    log_a = loga_ref[...].astype(jnp.float32)   # [L, W]
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * x
+    L = x.shape[0]
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + b[t]
+        y_ref[t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, L, step, h_scr[0, :])
+    h_scr[...] = h[None, :]
+
+
+def rglru_scan(x, log_a, *, chunk=256, interpret=False):
+    """x [G, S, W]; log_a same shape -> h [G, S, W] (f32).
+
+    G folds batch; W should be a multiple of 128 for TPU lanes (caller pads).
+    """
+    G, S, W = x.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    y = pl.pallas_call(
+        _kernel,
+        grid=(G, nc),
+        in_specs=[
+            pl.BlockSpec((None, L, W), lambda g, j: (g, j, 0)),
+            pl.BlockSpec((None, L, W), lambda g, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, L, W), lambda g, j: (g, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
+        interpret=interpret,
+    )(x, log_a)
+    return y

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the SSD kernel: the model layer's chunked scan
+(itself validated against the sequential recurrence in tests)."""
+from repro.models.layers.ssd import ssd_chunked, ssd_recurrent_step
+
+
+def reference(x, dt, a_log, Bm, Cm, chunk=128):
+    y, _ = ssd_chunked(x, dt, a_log, Bm, Cm, chunk)
+    return y

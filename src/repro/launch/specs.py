@@ -1,0 +1,84 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  Also provides the matching input PartitionSpecs and the
+step-function builders used by both the dry-run and real launches.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ParallelConfig, ShapeConfig,
+                                SHAPES)
+from repro.models import model as M
+from repro.models.model import VIS_EMBED_DIM
+
+A = jax.ShapeDtypeStruct
+
+
+def batch_pspec(pcfg: ParallelConfig) -> P:
+    return P(tuple(pcfg.dp_axes))
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (see DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "quadratic attention at 524k context"
+    return True, ""
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        sd = S // cfg.enc_seq_ratio
+        return {"frames": A((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": A((B, sd + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        nv = cfg.n_vision_tokens
+        return {"patches": A((B, nv, VIS_EMBED_DIM), jnp.bfloat16),
+                "tokens": A((B, S - nv + 1), jnp.int32)}
+    return {"tokens": A((B, S + 1), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        sd = S // cfg.enc_seq_ratio
+        return {"frames": A((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": A((B, sd), jnp.int32)}
+    if cfg.family == "vlm":
+        nv = cfg.n_vision_tokens
+        return {"patches": A((B, nv, VIS_EMBED_DIM), jnp.bfloat16),
+                "tokens": A((B, S - nv), jnp.int32)}
+    return {"tokens": A((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A]:
+    return {"tokens": A((shape.global_batch, 1), jnp.int32)}
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    enc_len = shape.seq_len if cfg.family == "encdec" else 0
+    return M.init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True,
+                        enc_len=enc_len)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, A]:
+    """Every input of the step function lowered for this shape cell."""
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 pcfg: ParallelConfig) -> Dict[str, P]:
+    bp = batch_pspec(pcfg)
+    specs = input_specs(cfg, shape)
+    return {k: P(bp[0]) if v.ndim == 1 else
+            P(bp[0], *([None] * (v.ndim - 1))) for k, v in specs.items()}

@@ -1,0 +1,71 @@
+"""Step-function builders + sharding trees shared by dryrun and real launches."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ParallelConfig, RunConfig,
+                                ShapeConfig)
+from repro.models import model as M
+from repro.models import sharding as SH
+from repro.train import optimizer as opt
+from repro.train.train_step import make_train_step
+
+
+def train_shardings(cfg: ModelConfig, pcfg: ParallelConfig, mesh):
+    rules = SH.rules_train(cfg, pcfg)
+    pshard = SH.tree_shardings(M.param_axes(cfg), mesh, rules)
+    oshard = opt.OptState(count=NamedSharding(mesh, P()),
+                          m=pshard, v=pshard)
+    return pshard, oshard, rules
+
+
+def decode_shardings(cfg: ModelConfig, pcfg: ParallelConfig, mesh,
+                     shape: ShapeConfig = None):
+    rules = SH.rules_decode(cfg, pcfg)
+    if shape is not None:
+        dp = 1
+        for a in pcfg.dp_axes:
+            dp *= dict(zip(pcfg.axis_names(), pcfg.mesh_shape()))[a]
+        if shape.global_batch % dp:
+            rules = dict(rules)
+            rules["batch"] = None    # e.g. long_500k batch=1: replicate
+    pshard = SH.tree_shardings(M.param_axes(cfg), mesh, rules)
+    cshard = SH.tree_shardings(M.cache_logical_axes(cfg), mesh, rules)
+    return pshard, cshard, rules
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    pcfg: ParallelConfig, mesh, specs: Dict[str, Any]):
+    """Batch-dim sharding; replicate if the batch doesn't divide the axes."""
+    dp = 1
+    for a in pcfg.dp_axes:
+        dp *= dict(zip(pcfg.axis_names(), pcfg.mesh_shape()))[a]
+    axes = tuple(pcfg.dp_axes) if shape.global_batch % dp == 0 else None
+    return {k: NamedSharding(mesh, P(axes, *([None] * (v.ndim - 1))))
+            for k, v in specs.items()}
+
+
+def build_train_fn(cfg: ModelConfig, pcfg: ParallelConfig, rcfg: RunConfig,
+                   mesh):
+    step = make_train_step(cfg, pcfg, rcfg, mesh=mesh)
+
+    def train_step(params, opt_state, batch):
+        return step(params, opt_state, batch)
+
+    return train_step
+
+
+def build_prefill_fn(cfg: ModelConfig, pcfg: ParallelConfig):
+    def prefill_step(params, batch, cache):
+        return M.prefill(cfg, pcfg, params, batch, cache)
+    return prefill_step
+
+
+def build_serve_fn(cfg: ModelConfig, pcfg: ParallelConfig):
+    def serve_step(params, cache, tokens):
+        return M.decode_step(cfg, pcfg, params, cache, tokens)
+    return serve_step

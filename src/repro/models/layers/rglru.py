@@ -1,0 +1,118 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block  [arXiv:2402.19427].
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    log a_t = -c * softplus(Lambda) * r_t   # c = 8.0
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluate the linear recurrence with
+``jax.lax.associative_scan`` (log-space decays, f32); decode is the single
+recurrent step.  The surrounding block follows the paper: linear in-proj with
+a gated branch, short depthwise conv, RG-LRU, then out-proj.
+``repro.kernels.rglru`` is the Pallas twin of ``rglru_scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers.basic import _leaf
+
+A = jax.ShapeDtypeStruct
+
+
+def rglru_params(d_model, rcfg: RGLRUConfig, dtype, key=None):
+    w = rcfg.lru_width or d_model
+    W = rcfg.conv_width
+    ks = jax.random.split(key, 8) if key is not None else (None,) * 8
+    return {
+        "in_x": _leaf((d_model, w), dtype, ks[0], "normal"),
+        "in_gate": _leaf((d_model, w), dtype, ks[1], "normal"),
+        "conv_w": _leaf((W, w), dtype, ks[2], "normal"),
+        "conv_b": _leaf((w,), dtype, ks[3], "zeros"),
+        "wa": _leaf((w, w), dtype, ks[4], "normal"),
+        "wx": _leaf((w, w), dtype, ks[5], "normal"),
+        "a_param": _leaf((w,), jnp.float32, ks[6], "ones"),   # Lambda
+        "out": _leaf((w, d_model), dtype, ks[7], "normal"),
+    }
+
+
+def rglru_axes():
+    return {"in_x": ("embed", "inner"), "in_gate": ("embed", "inner"),
+            "conv_w": (None, "inner"), "conv_b": ("inner",),
+            "wa": ("inner", "inner_in"), "wx": ("inner", "inner_in"),
+            "a_param": ("inner",), "out": ("inner", "embed")}
+
+
+def rglru_scan(x, log_a, init_h=None):
+    """Associative-scan linear recurrence.
+
+    x [B,S,W] (already input-gated), log_a [B,S,W] (log decay, <= 0).
+    h_t = a_t h_{t-1} + sqrt(1-a_t^2) x_t.
+    Returns (h [B,S,W] f32, final_h [B,W]).
+    """
+    xf = x.astype(jnp.float32)
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * xf
+    if init_h is not None:
+        # fold the initial state in as a virtual first element
+        log_a = jnp.concatenate([jnp.zeros_like(log_a[:, :1]), log_a], 1)
+        b = jnp.concatenate([init_h.astype(jnp.float32)[:, None], b], 1)
+
+    def combine(left, right):
+        la, lb = left
+        ra, rb = right
+        return la + ra, lb * jnp.exp(ra) + rb
+
+    la, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    if init_h is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rglru_step(h, xt, log_at):
+    """One decode step: h [B,W] f32, xt [B,W] (input-gated), log_at [B,W]."""
+    a = jnp.exp(log_at)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    new = a * h + b * xt.astype(jnp.float32)
+    return new, new
+
+
+def _causal_conv(x, w, b, state=None):
+    W = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+           if state is None else state)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b, xp[:, -(W - 1):, :]
+
+
+def rglru_block(p, x, rcfg: RGLRUConfig, state=None, conv_state=None):
+    """x [B,S,D] -> (out [B,S,D], (h_state [B,W] f32, conv_state))."""
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32), approximate=True)
+    xr = x @ p["in_x"]
+    xr, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    r = jax.nn.sigmoid((xr @ p["wa"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xr @ p["wx"]).astype(jnp.float32))
+    log_a = -rcfg.c * jax.nn.softplus(p["a_param"]) * r          # [B,S,W]
+    gated = i * xr.astype(jnp.float32)
+    if state is None:
+        h, fin = rglru_scan(gated.astype(x.dtype), log_a, None)
+    else:
+        fin, _ = rglru_step(state, gated[:, 0], log_a[:, 0])
+        h = fin[:, None]
+    y = (h * gate).astype(x.dtype)
+    return y @ p["out"], (fin, new_conv)
+
+
+def rglru_init_state(batch, d_model, rcfg: RGLRUConfig, dtype=jnp.bfloat16,
+                     abstract=False):
+    w = rcfg.lru_width or d_model
+    shapes = {"state": (batch, w), "conv": (batch, rcfg.conv_width - 1, w)}
+    if abstract:
+        return {"state": A(shapes["state"], jnp.float32),
+                "conv": A(shapes["conv"], dtype)}
+    return {"state": jnp.zeros(shapes["state"], jnp.float32),
+            "conv": jnp.zeros(shapes["conv"], dtype)}

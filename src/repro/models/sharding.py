@@ -1,0 +1,121 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Params and caches carry *logical* axis names (see ``*_axes`` functions);
+``rules_train``/``rules_decode`` map them onto the physical mesh axes.  The
+mapping adapts per architecture (e.g. experts go to the model axis only when
+the expert count divides it) and per parallel config (FSDP on/off).
+
+``set_mesh``/``constrain`` provide activation sharding constraints inside
+model code without threading the mesh through every call.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[Dict] = None):
+    _STATE.mesh = mesh
+    _STATE.rules = rules
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def rules_train(cfg: ModelConfig, pcfg: ParallelConfig) -> Dict[str, object]:
+    """Logical axis -> mesh axis (or tuple of axes, or None)."""
+    fsdp_axis = "data" if pcfg.fsdp else None
+    ep_ok = cfg.moe is not None and cfg.moe.n_experts % pcfg.model == 0
+    return {
+        "vocab": "model",
+        "embed": fsdp_axis,
+        "heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "expert": "model" if ep_ok else None,
+        "expert_ffn": None if ep_ok else "model",
+        "inner": "model",
+        "inner_in": fsdp_axis,
+        "ssm_heads": None,
+        "layers": None,
+        # activations
+        "batch": tuple(pcfg.dp_axes),
+        "seq": "model" if pcfg.seq_shard_acts else None,
+        "kv_seq": "model",
+        None: None,
+    }
+
+
+def rules_decode(cfg: ModelConfig, pcfg: ParallelConfig) -> Dict[str, object]:
+    r = rules_train(cfg, pcfg)
+    r = dict(r)
+    r["embed"] = None          # no FSDP for serving weights
+    r["inner_in"] = None
+    r["seq"] = None
+    r["kv_seq"] = "model"      # sequence-sharded KV cache (flash-decode)
+    return r
+
+
+def logical_to_pspec(axes: Tuple, rules: Dict) -> P:
+    spec = []
+    used = set()
+    for ax in axes:
+        m = rules.get(ax)
+        if isinstance(m, tuple):
+            m = tuple(x for x in m if x not in used) or None
+        if m is None or m in used:
+            spec.append(None)
+        else:
+            spec.append(m)
+            used.add(m) if not isinstance(m, tuple) else used.update(m)
+    return P(*spec)
+
+
+def tree_pspecs(axes_tree, rules):
+    return jax.tree.map(lambda ax: logical_to_pspec(ax, rules), axes_tree,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def tree_shardings(axes_tree, mesh, rules):
+    return jax.tree.map(lambda ax: NamedSharding(mesh,
+                                                 logical_to_pspec(ax, rules)),
+                        axes_tree, is_leaf=lambda v: isinstance(v, tuple))
+
+
+def constrain(x, logical_axes: Tuple):
+    """with_sharding_constraint if a mesh is active; no-op otherwise.
+
+    Axes that are *manual* in the current tracing context (inside a
+    shard_map, e.g. the pod axis in the int8-ring gradient path) are
+    stripped from the spec — mixing manual and auto axes in one
+    PartitionSpec is rejected by JAX.
+    """
+    mesh = get_mesh()
+    rules = getattr(_STATE, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec = logical_to_pspec(logical_axes, rules)
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        manual = {n for n, t in zip(am.axis_names, am.axis_types)
+                  if "Manual" in str(t)}
+    except Exception:   # noqa: BLE001 — no tracing context
+        manual = set()
+    if manual:
+        def strip(entry):
+            if entry is None:
+                return None
+            if isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a not in manual)
+                return kept or None
+            return None if entry in manual else entry
+        spec = P(*(strip(e) for e in spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,41 @@
+"""Fault / platform-event injection for runtime tests and examples.
+
+Drives the SAME platform-hint path the real optimization managers use: the
+injector publishes EVICTION_NOTICE / SCALE_UP_OFFER / THROTTLE_NOTICE
+through the global manager, and the WI trainer reacts exactly as it would
+to a SpotManager or MADatacenterManager decision.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core import hints as H
+from repro.core.global_manager import GlobalManager
+
+
+class FaultInjector:
+    def __init__(self, gm: GlobalManager, workload: str,
+                 resource: str = "rack0/host0/vm0"):
+        self.gm, self.workload, self.resource = gm, workload, resource
+
+    def _emit(self, event: H.PlatformEvent, deadline_s=0.0, **payload):
+        ok = self.gm.publish_platform_hint(H.PlatformHint(
+            event=event.value, workload=self.workload, resource=self.resource,
+            deadline_s=deadline_s, payload=payload, source_opt="fault-inject"))
+        assert ok, "platform hint rate limited during fault injection"
+
+    def evict(self, n_devices: int, deadline_s: float = 30.0):
+        self._emit(H.PlatformEvent.EVICTION_NOTICE, deadline_s,
+                   n_devices=n_devices)
+
+    def offer_capacity(self, n_devices: int):
+        self._emit(H.PlatformEvent.SCALE_UP_OFFER, n_devices=n_devices)
+
+    def throttle(self, frac: float = 0.5):
+        self._emit(H.PlatformEvent.THROTTLE_NOTICE, frac=frac)
+
+    def unthrottle(self):
+        self._emit(H.PlatformEvent.OVERCLOCK_OFFER, boost_frac=0.0)
+
+    def maintenance(self, deadline_s: float = 60.0):
+        self._emit(H.PlatformEvent.MAINTENANCE, deadline_s)

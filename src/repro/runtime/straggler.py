@@ -1,0 +1,54 @@
+"""Straggler detection + mitigation policy.
+
+Hosts report per-step durations (via WI runtime hints, key
+``x-step-time-ms``).  The detector keeps an EWMA per host and flags hosts
+whose smoothed step time exceeds ``threshold`` x the fleet median.  The
+mitigation policy is the WI loop's job: publish an ``x-straggler`` hint so
+the platform can rightsize/migrate, and (if the job is elastic) exclude the
+host at the next checkpoint boundary.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class HostStat:
+    ewma_ms: float = 0.0
+    n: int = 0
+
+
+class StragglerDetector:
+    def __init__(self, alpha: float = 0.3, threshold: float = 1.5,
+                 min_samples: int = 5):
+        self.alpha, self.threshold, self.min_samples = (alpha, threshold,
+                                                        min_samples)
+        self._hosts: Dict[str, HostStat] = {}
+
+    def record(self, host: str, step_ms: float):
+        st = self._hosts.setdefault(host, HostStat())
+        st.ewma_ms = (step_ms if st.n == 0
+                      else (1 - self.alpha) * st.ewma_ms
+                      + self.alpha * step_ms)
+        st.n += 1
+
+    def median_ewma(self) -> Optional[float]:
+        vals = sorted(s.ewma_ms for s in self._hosts.values()
+                      if s.n >= self.min_samples)
+        return vals[len(vals) // 2] if vals else None
+
+    def stragglers(self) -> List[str]:
+        med = self.median_ewma()
+        if med is None or med <= 0:
+            return []
+        return [h for h, s in self._hosts.items()
+                if s.n >= self.min_samples
+                and s.ewma_ms > self.threshold * med]
+
+    def slowdown(self, host: str) -> float:
+        med = self.median_ewma()
+        st = self._hosts.get(host)
+        if not med or not st or st.n < self.min_samples:
+            return 1.0
+        return st.ewma_ms / med

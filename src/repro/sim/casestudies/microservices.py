@@ -1,0 +1,97 @@
+"""Case study §6.2: Microservices (DeathStarBench social network on K8s+WI).
+
+Model: control plane (LB, Media Frontend, Memcached, MongoDB, Redis) on
+"management"-requirement VMs; worker pods (Nginx + logic) replicated behind
+the LB.  Load is diurnal; tail latency follows an M/M/c-flavored
+approximation latency(util) = base + q / (1 - util^c).
+
+Scenarios:
+  baseline — Regular VMs + plain autoscaling (paper: 376 ms p99)
+  wi       — WI hints enable: CPU oversubscription on control VMs (50% CPU /
+             20% memory), Harvest VMs + Overclocking for workers, MA DCs.
+             Overclocking cuts worker service time (Table 2: +11% perf);
+             evictions covered by graceful pod migration (no latency spikes).
+
+Paper targets: p99 376 -> 332 ms (-13.3%); owner cost -44% (most from
+overclocking, rest from Harvest).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.global_manager import GlobalManager
+from repro.core.optimizations import (HarvestManager, OverclockingManager,
+                                      OversubscriptionManager)
+from repro.core.pricing import PRICING
+
+N_CONTROL = 2
+MIN_WORKERS = 4
+VM_CORES = 8
+BASE_MS = 215.0          # irreducible path latency
+Q_MS = 132.0             # queueing coefficient
+UTIL_TARGET = 0.55       # autoscaler's target utilization
+OC_SPEEDUP = 1.0 + PRICING["overclocking"].perf_benefit  # +11% (Table 2)
+HOURS = 24.0
+DT = 1.0 / 60.0
+
+
+def _load(t):       # diurnal request rate in "worker-cores of demand"
+    return 22.0 * (0.55 + 0.45 * math.sin(2 * math.pi * (t - 8.0) / 24.0) ** 2)
+
+
+def _p99(util, speed=1.0):
+    """Overclocking shortens service time, shrinking every latency term."""
+    util = min(util, 0.97)
+    return (BASE_MS + Q_MS / (1.0 - util ** 3)) / speed
+
+
+def run(seed: int = 0) -> Dict[str, Dict[str, float]]:
+    rng = random.Random(seed)
+    gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+    gm.register_workload("socialnet-workers", {
+        "scale_out_in": True, "scale_up_down": True,
+        "preemptibility_pct": 50.0, "delay_tolerance_ms": 200.0,
+        "availability_nines": 3.0, "deploy_time_ms": 120_000.0})
+    gm.register_workload("socialnet-control", {
+        "scale_up_down": True, "delay_tolerance_ms": 50.0,
+        "availability_nines": 4.0})
+    oversub = OversubscriptionManager(gm)
+    assert oversub.eligible("socialnet-control", util_p95=0.45)
+
+    out = {}
+    for scenario in ("baseline", "wi"):
+        speed = OC_SPEEDUP if scenario == "wi" else 1.0
+        worker_price = (PRICING["harvest"].price_multiplier * 0.55
+                        + PRICING["overclocking"].price_multiplier * 0.45) \
+            if scenario == "wi" else 1.0
+        control_price = (PRICING["oversubscription"].price_multiplier
+                         if scenario == "wi" else 1.0)
+        t, cost, lat_samples = 0.0, 0.0, []
+        workers = MIN_WORKERS
+        while t < HOURS:
+            demand = _load(t) + rng.uniform(-0.8, 0.8)
+            eff_capacity = workers * VM_CORES * speed
+            util = demand / eff_capacity
+            # autoscaler (both scenarios have it — paper baseline includes it)
+            want = max(MIN_WORKERS,
+                       math.ceil(demand / (VM_CORES * speed * UTIL_TARGET)))
+            workers += max(min(want - workers, 2), -1)     # bounded steps
+            lat_samples.append(_p99(util, speed))
+            cost += (workers * VM_CORES * worker_price
+                     + N_CONTROL * VM_CORES * control_price) * DT
+            t += DT
+        lat_samples.sort()
+        out[scenario] = {
+            "p99_ms": lat_samples[int(0.99 * len(lat_samples))],
+            "mean_p99_ms": sum(lat_samples) / len(lat_samples),
+            "cost": cost,
+        }
+    b, w = out["baseline"], out["wi"]
+    out["summary"] = {
+        "latency_improvement": 1.0 - w["p99_ms"] / b["p99_ms"],
+        "cost_saving": 1.0 - w["cost"] / b["cost"],
+    }
+    return out

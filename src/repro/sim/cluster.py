@@ -1,0 +1,77 @@
+"""Simulated cluster state: servers, VMs, regions — the "view" dict consumed
+by optimization managers (see core/optimizations/managers.py docstring)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class VM:
+    vm_id: str
+    workload: str
+    server: str
+    cores: float
+    util_p95: float = 0.5
+    spot: bool = False
+    harvest: bool = False
+    harvested: float = 0.0          # extra cores currently harvested
+    oversubscribed: bool = False
+    alive: bool = True
+
+
+@dataclass
+class Server:
+    server_id: str
+    cores: float
+    region: str = "region-0"
+    power_capped: bool = False
+
+
+@dataclass
+class Region:
+    name: str
+    price: float = 1.0
+    carbon_g_kwh: float = 546.0      # §6.4 baseline grid intensity
+
+
+class Cluster:
+    def __init__(self):
+        self.servers: Dict[str, Server] = {}
+        self.vms: Dict[str, VM] = {}
+        self.regions: Dict[str, Region] = {
+            "region-0": Region("region-0", 1.0, 546.0),
+            "region-green": Region("region-green", 0.78, 267.0),
+        }
+
+    def add_server(self, server_id: str, cores: float, region="region-0"):
+        self.servers[server_id] = Server(server_id, cores, region)
+
+    def add_vm(self, vm: VM):
+        self.vms[vm.vm_id] = vm
+
+    def remove_vm(self, vm_id: str):
+        self.vms.pop(vm_id, None)
+
+    def free_cores(self, server_id: str) -> float:
+        used = sum(v.cores + v.harvested for v in self.vms.values()
+                   if v.server == server_id and v.alive)
+        return self.servers[server_id].cores - used
+
+    def view(self) -> Dict:
+        return {
+            "vms": {v.vm_id: {"workload": v.workload, "server": v.server,
+                              "cores": v.cores, "util_p95": v.util_p95,
+                              "spot": v.spot, "harvest": v.harvest,
+                              "harvested": v.harvested,
+                              "oversubscribed": v.oversubscribed}
+                    for v in self.vms.values() if v.alive},
+            "servers": {s.server_id: {"cores": s.cores,
+                                      "free_cores": self.free_cores(
+                                          s.server_id),
+                                      "power_cap": s.power_capped}
+                        for s in self.servers.values()},
+            "regions": {r.name: {"price": r.price,
+                                 "carbon_g_kwh": r.carbon_g_kwh}
+                        for r in self.regions.values()},
+        }

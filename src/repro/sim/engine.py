@@ -1,0 +1,42 @@
+"""Deterministic discrete-event engine driving the cluster simulator."""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional
+
+
+class SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class Engine:
+    def __init__(self):
+        self.clock = SimClock()
+        self._q = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable[[], None]):
+        heapq.heappush(self._q, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]):
+        self.at(self.clock.t + dt, fn)
+
+    def every(self, dt: float, fn: Callable[[], None], until: float):
+        def tick():
+            fn()
+            if self.clock.t + dt <= until:
+                self.after(dt, tick)
+        self.after(dt, tick)
+
+    def run(self, until: float = float("inf")):
+        while self._q and self._q[0][0] <= until:
+            t, _, fn = heapq.heappop(self._q)
+            self.clock.t = t
+            fn()
+        self.clock.t = max(self.clock.t, min(until, self.clock.t if not
+                                             self._q else until))

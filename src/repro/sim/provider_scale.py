@@ -1,0 +1,135 @@
+"""Provider-scale savings model (paper §6.4, Figure 5).
+
+Inputs: Table 3 per-optimization applicable-core fractions + Table 2 pricing
++ the §6.4 conflict sets ({spot, harvest, non-preprovision} contend for spare
+compute; {over, under, MA} for CPU frequency).
+
+Method: the paper enables optimizations per workload "in decreasing order of
+the owner benefits" and attributes the incremental saving of each step
+(Figure 5 waterfall).  We reproduce that attribution under (a) an
+*independence* assumption across opt applicabilities (with the natural
+nesting harvest ⊂ spot, since harvest's requirements are a superset), and
+(b) a one-parameter *overlap-calibrated* variant: a scalar ρ models the
+positive correlation between applicabilities (flexible workloads qualify for
+many opts at once, concentrating discounts on the same cores), fit by
+bisection to the paper's 48.8% total.  The paper's own LP over pairwise
+joints plays the same role; the joint data is not public.
+
+Targets: 48.8% average cost saving, 27.6% carbon saving (both reproduced to
+within 2pp by the independence baseline alone; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core.pricing import PRICING
+
+# Table 3 "Cores (%)" column.
+TABLE3_CORE_FRAC = {
+    "auto_scaling": 0.331, "spot": 0.216, "harvest": 0.064,
+    "overclocking": 0.413, "underclocking": 0.360,
+    "non_preprovision": 0.688, "region_agnostic": 0.430,
+    "oversubscription": 0.076, "rightsizing": 0.021,
+    "ma_datacenters": 0.596,
+}
+
+# Figure 5 reported contributions (the named bars).
+FIGURE5_CONTRIB = {
+    "ma_datacenters": 0.183, "spot": 0.130, "region_agnostic": 0.060,
+    "harvest": 0.058, "auto_scaling": 0.028, "overclocking": 0.013,
+}
+PAPER_TOTAL_SAVING = 0.488
+PAPER_CARBON_SAVING = 0.276
+
+# Decreasing owner benefit (Table 2) — the paper's enablement order.
+BENEFIT_ORDER = ("harvest", "spot", "rightsizing", "ma_datacenters",
+                 "region_agnostic", "auto_scaling", "oversubscription",
+                 "overclocking", "non_preprovision", "underclocking")
+
+_SPARE = ("harvest", "spot", "non_preprovision")
+_FREQ = ("ma_datacenters", "overclocking", "underclocking")
+
+
+def waterfall(fracs: Dict[str, float], value=None, rho: float = 0.0
+              ) -> Tuple[float, Dict[str, float]]:
+    """Sequential enablement in BENEFIT_ORDER.
+
+    Returns (final expected multiplier, per-opt incremental contribution).
+    ``value(o)`` maps an opt to its multiplier (price by default, carbon
+    keep-fraction for the carbon variant).  ``rho`` shrinks each step's
+    *newly reachable* core fraction by (1-rho) to model applicability
+    overlap beyond the explicit conflict sets.
+    """
+    value = value or (lambda o: PRICING[o].price_multiplier)
+    price = 1.0
+    contrib: Dict[str, float] = {}
+    spare_taken = 0.0       # fraction of cores already served by spare set
+    freq_taken = 0.0
+    for o in BENEFIT_ORDER:
+        f = fracs[o]
+        if o in _SPARE:
+            # nesting harvest ⊂ spot; non-preprovision independent of both
+            if o == "harvest":
+                newly = f
+            elif o == "spot":
+                newly = max(f - spare_taken, 0.0)
+            else:
+                newly = f * (1.0 - spare_taken)
+            spare_taken = min(1.0, spare_taken + newly)
+        elif o in _FREQ:
+            newly = f * (1.0 - freq_taken)
+            freq_taken = min(1.0, freq_taken + newly)
+        else:
+            newly = f
+        newly *= (1.0 - rho)
+        new_price = price * (newly * value(o) + (1.0 - newly))
+        contrib[o] = price - new_price
+        price = new_price
+    return price, contrib
+
+
+def carbon_value(o: str) -> float:
+    return 1.0 - PRICING[o].carbon_benefit
+
+
+def fit_rho(target: float = PAPER_TOTAL_SAVING,
+            fracs: Dict[str, float] = None) -> float:
+    """Bisection on the single overlap parameter to match the paper total."""
+    fracs = fracs or TABLE3_CORE_FRAC
+    lo, hi = -0.5, 0.9
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        saving = 1.0 - waterfall(fracs, rho=mid)[0]
+        if saving > target:
+            lo, hi = mid, hi
+            lo = mid
+        else:
+            hi = mid
+        lo, hi = (mid, hi) if saving > target else (lo, mid)
+    return 0.5 * (lo + hi)
+
+
+@dataclass
+class ProviderScaleResult:
+    saving_independence: float
+    carbon_independence: float
+    contrib_independence: Dict[str, float]
+    rho: float
+    saving_calibrated: float
+    carbon_calibrated: float
+    contrib_calibrated: Dict[str, float]
+
+
+def evaluate() -> ProviderScaleResult:
+    f = dict(TABLE3_CORE_FRAC)
+    p0, c0 = waterfall(f)
+    k0, _ = waterfall(f, value=carbon_value)
+    rho = fit_rho()
+    p1, c1 = waterfall(f, rho=rho)
+    k1, _ = waterfall(f, value=carbon_value, rho=rho)
+    return ProviderScaleResult(
+        saving_independence=1.0 - p0, carbon_independence=1.0 - k0,
+        contrib_independence=c0, rho=rho,
+        saving_calibrated=1.0 - p1, carbon_calibrated=1.0 - k1,
+        contrib_calibrated=c1)

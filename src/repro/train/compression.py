@@ -1,0 +1,93 @@
+"""Gradient compression: int8 ring all-reduce over a mesh axis.
+
+The cross-pod (DCN) gradient synchronization is the bandwidth-critical
+collective at multi-pod scale.  ``ring_allreduce_q`` implements a ring
+reduce-scatter + all-gather with blockwise int8 quantization per hop via
+``jax.lax.ppermute`` — 4x fewer bytes on the wire than an f32 all-reduce,
+visible directly in the dry-run's collective-bytes term (§Perf lever).
+
+Error feedback: quantization residue of the *local* contribution is returned
+so the caller can fold it into the next step's gradients (Karimireddy et al.,
+"Error Feedback Fixes SignSGD").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, block=256):
+    """Blockwise symmetric int8 quantization.  Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def ring_allreduce_q(x, axis_name, axis_size, block=256):
+    """Quantized ring all-reduce (sum) of ``x`` over ``axis_name``.
+
+    Must run inside shard_map with ``axis_name`` manual.  Wire format per hop
+    is (int8 payload, f32 blockwise scales) — scales add 4/block overhead
+    (1.6% at block=256).
+    """
+    if axis_size == 1:
+        return x, jnp.zeros_like(x)
+    # reduce-scatter phase: each rank accumulates one segment
+    n = axis_size
+    idx = jax.lax.axis_index(axis_name)
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % (n * block)
+    flat = jnp.pad(flat, (0, pad))
+    segs = flat.reshape(n, -1)                       # [n, seg]
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    acc = segs
+    err_total = jnp.zeros_like(segs)
+
+    def hop(carry, h):
+        acc, err = carry
+        # send segment (idx - h - 1) mod n, quantized
+        send_ix = (idx - h - 1) % n
+        payload = acc[send_ix]
+        q, sc = quantize_int8(payload, block)
+        deq = dequantize_int8(q, sc, payload.shape)
+        err = err.at[send_ix].add(payload - deq)
+        q_r = jax.lax.ppermute(q, axis_name, perm)
+        sc_r = jax.lax.ppermute(sc, axis_name, perm)
+        recv = dequantize_int8(q_r, sc_r, payload.shape)
+        recv_ix = (idx - h - 2) % n
+        acc = acc.at[recv_ix].add(recv)
+        return (acc, err), None
+
+    (acc, err_total), _ = jax.lax.scan(hop, (acc, err_total), jnp.arange(n - 1))
+
+    # all-gather phase: circulate the fully-reduced segment
+    def gather_hop(carry, h):
+        acc = carry
+        send_ix = (idx - h) % n
+        payload = acc[send_ix]
+        q, sc = quantize_int8(payload, block)
+        q_r = jax.lax.ppermute(q, axis_name, perm)
+        sc_r = jax.lax.ppermute(sc, axis_name, perm)
+        recv = dequantize_int8(q_r, sc_r, payload.shape)
+        recv_ix = (idx - h - 1) % n
+        acc = acc.at[recv_ix].set(recv)
+        return acc, None
+
+    acc, _ = jax.lax.scan(gather_hop, acc, jnp.arange(n - 1))
+    out = acc.reshape(-1)[: x.size].reshape(x.shape).astype(x.dtype)
+    err = err_total.reshape(-1)[: x.size].reshape(x.shape)
+    return out, err

@@ -1,0 +1,153 @@
+"""Optimizers (no optax offline): AdamW and Adafactor, sharding-transparent.
+
+Optimizer state mirrors the parameter tree, so the same NamedShardings apply
+(ZeRO-style: with FSDP the moments are sharded exactly like the weights).
+``opt_state_dtype`` trades moment precision for memory (llama3-405b on
+v5e-256 uses bf16 moments; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+
+
+class OptState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any          # adamw: per-leaf; adafactor: {row, col or full}
+
+
+def adamw_init(params, dtype=jnp.float32, abstract=False):
+    def z(l):
+        if abstract:
+            return jax.ShapeDtypeStruct(l.shape, dtype)
+        return jnp.zeros(l.shape, dtype)
+    mk = (lambda: jax.ShapeDtypeStruct((), jnp.int32)) if abstract \
+        else (lambda: jnp.zeros((), jnp.int32))
+    return OptState(count=mk(), m=jax.tree.map(z, params),
+                    v=jax.tree.map(z, params))
+
+
+def opt_state_axes(param_axes_tree):
+    """Logical axes for the optimizer state (mirrors params)."""
+    return OptState(count=(), m=param_axes_tree, v=param_axes_tree)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale)
+                        .astype(g.dtype), grads), norm
+
+
+def adamw_update(rcfg: RunConfig, lr, params, grads, state: OptState):
+    b1, b2, eps = rcfg.beta1, rcfg.beta2, 1e-8
+    cnt = state.count + 1
+    bc1 = 1.0 - b1 ** cnt.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** cnt.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g32 * g32 * (1 - b2)
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            step = step + rcfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    newp = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return newp, OptState(count=cnt, m=newm, v=newv)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments — the memory-tight option)
+# ---------------------------------------------------------------------------
+
+def _factored(shape):
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params, abstract=False):
+    def z(shape, dtype=jnp.float32):
+        return (jax.ShapeDtypeStruct(shape, dtype) if abstract
+                else jnp.zeros(shape, dtype))
+
+    def per_leaf(l):
+        if _factored(l.shape):
+            return {"row": z(l.shape[:-1]), "col": z(l.shape[:-2] + l.shape[-1:])}
+        return {"full": z(l.shape)}
+
+    mk = (lambda: jax.ShapeDtypeStruct((), jnp.int32)) if abstract \
+        else (lambda: jnp.zeros((), jnp.int32))
+    return OptState(count=mk(), m=None,
+                    v=jax.tree.map(per_leaf, params))
+
+
+def adafactor_update(rcfg: RunConfig, lr, params, grads, state: OptState):
+    cnt = state.count + 1
+    decay = 1.0 - cnt.astype(jnp.float32) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if "row" in v:
+            row = v["row"] * decay + g2.mean(-1) * (1 - decay)
+            col = v["col"] * decay + g2.mean(-2) * (1 - decay)
+            rfac = row / jnp.maximum(row.mean(-1, keepdims=True), eps)
+            step = g32 / (jnp.sqrt(rfac)[..., None] * jnp.sqrt(col)[..., None, :]
+                          + 1e-9)
+            nv = {"row": row, "col": col}
+        else:
+            full = v["full"] * decay + g2 * (1 - decay)
+            step = g32 / (jnp.sqrt(full) + 1e-9)
+            nv = {"full": full}
+        clip = jnp.maximum(1.0, global_norm([step]) /
+                           (1.0 * jnp.sqrt(jnp.asarray(step.size, jnp.float32))))
+        step = step / clip
+        if p.ndim >= 2:
+            step = step + rcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nv
+
+    leaves = jax.tree_util.tree_structure(params)
+    flat_p, flat_g = jax.tree.leaves(params), jax.tree.leaves(grads)
+    flat_v = jax.tree.leaves(state.v, is_leaf=lambda x: isinstance(x, dict)
+                             and ("row" in x or "full" in x))
+    news = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    newp = jax.tree_util.tree_unflatten(leaves, [n[0] for n in news])
+    newv = jax.tree_util.tree_unflatten(leaves, [n[1] for n in news])
+    return newp, OptState(count=cnt, m=None, v=newv)
+
+
+def lr_schedule(rcfg: RunConfig, step):
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(1.0, (step + 1) / max(rcfg.warmup_steps, 1))
+    prog = jnp.clip((step - rcfg.warmup_steps)
+                    / max(rcfg.total_steps - rcfg.warmup_steps, 1), 0.0, 1.0)
+    return rcfg.learning_rate * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def init_opt_state(rcfg: RunConfig, params, pcfg=None, abstract=False):
+    dtype = jnp.dtype(pcfg.opt_state_dtype) if pcfg else jnp.float32
+    if rcfg.optimizer == "adafactor":
+        return adafactor_init(params, abstract=abstract)
+    return adamw_init(params, dtype=dtype, abstract=abstract)
+
+
+def apply_update(rcfg: RunConfig, lr, params, grads, state):
+    if rcfg.optimizer == "adafactor":
+        return adafactor_update(rcfg, lr, params, grads, state)
+    return adamw_update(rcfg, lr, params, grads, state)

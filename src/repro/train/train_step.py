@@ -1,0 +1,119 @@
+"""Train-step builder: microbatched gradient accumulation, clipping, optional
+cross-pod int8 gradient compression, optimizer update.
+
+The returned function is pure and jit-able; the launcher supplies shardings.
+DP gradient reduction is implicit in the mean loss under jit-auto; the
+compressed path peels the pod axis out with shard_map and runs the int8 ring
+explicitly (multi-pod DCN lever).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, RunConfig
+from repro.models import model as M
+from repro.train import optimizer as opt
+from repro.train.compression import ring_allreduce_q
+
+
+def _microbatches(batch: Dict[str, jax.Array], n: int):
+    return jax.tree.map(
+        lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+
+
+def _constrain_like_params(cfg, tree):
+    """Pin a param-shaped tree (e.g. gradients) to the param shardings.
+
+    Without this the microbatch-scan carry holds *replicated* cotangents —
+    measured +40 GiB/device on llama3-405b/train_4k from the f32 [V, D]
+    embedding gradient alone.
+    """
+    from repro.models.sharding import constrain
+    axes = M.param_axes(cfg)
+    return jax.tree.map(lambda x, ax: constrain(x, ax), tree, axes,
+                        is_leaf=lambda v: isinstance(v, tuple))
+
+
+def grads_fn(cfg: ModelConfig, pcfg: ParallelConfig, params, batch):
+    """Mean-loss gradients with optional microbatch accumulation."""
+    def loss(p, b):
+        l, parts = M.loss_and_aux(cfg, pcfg, p, b)
+        return l, parts
+
+    nm = pcfg.microbatch
+    if nm <= 1:
+        (l, parts), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        return l, parts, _constrain_like_params(cfg, g)
+
+    mb = _microbatches(batch, nm)
+    acc_dt = jnp.dtype(pcfg.grad_accum_dtype)
+
+    def step(carry, b):
+        gacc, lacc = carry
+        (l, _), g = jax.value_and_grad(loss, has_aux=True)(params, b)
+        g = _constrain_like_params(cfg, g)
+        gacc = jax.tree.map(lambda a, x: a + x.astype(acc_dt), gacc, g)
+        gacc = _constrain_like_params(cfg, gacc)
+        return (gacc, lacc + l), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    g0 = _constrain_like_params(cfg, g0)
+    (gsum, lsum), _ = jax.lax.scan(step, (g0, jnp.zeros((), jnp.float32)), mb)
+    g = jax.tree.map(lambda x: (x / nm).astype(jnp.float32), gsum)
+    l = lsum / nm
+    return l, {"xent": l, "aux": jnp.zeros((), jnp.float32)}, g
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, rcfg: RunConfig,
+                    mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    When ``pcfg.grad_compression == 'int8'`` and the mesh has a pod axis, the
+    per-pod gradients are synchronized with the quantized ring instead of the
+    implicit DCN all-reduce.
+    """
+    use_ring = (pcfg.grad_compression == "int8" and pcfg.pod > 1
+                and mesh is not None)
+
+    def compute_grads(params, batch):
+        if not use_ring:
+            return grads_fn(cfg, pcfg, params, batch)
+
+        from jax.sharding import PartitionSpec as P
+        # partial-manual shard_map: only the pod axis is manual, so specs
+        # mention only 'pod'; data/model shardings flow through as auto.
+        pspec = jax.tree.map(lambda _: P(), M.abstract_params(cfg))
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(pspec, P("pod")), out_specs=(P(), P(), pspec),
+            check_vma=False, axis_names={"pod"})
+        def sharded(p, b):
+            # constrain() strips manual axes (pod) from specs in here
+            l, parts, g = grads_fn(cfg, pcfg, p, b)
+            flat, td = jax.tree_util.tree_flatten(g)
+            summed = []
+            for leaf in flat:
+                s, _err = ring_allreduce_q(leaf, "pod", pcfg.pod)
+                summed.append(s / pcfg.pod)
+            g = jax.tree_util.tree_unflatten(td, summed)
+            l = jax.lax.pmean(l, "pod")
+            return l, parts["xent"], g
+
+        l, xent, g = sharded(params, batch)
+        return l, {"xent": xent, "aux": jnp.zeros((), jnp.float32)}, g
+
+    def train_step(params, opt_state, batch):
+        l, parts, g = compute_grads(params, batch)
+        g, gnorm = opt.clip_by_global_norm(g, rcfg.grad_clip)
+        lr = opt.lr_schedule(rcfg, opt_state.count)
+        params, opt_state = opt.apply_update(rcfg, lr, params, g, opt_state)
+        metrics = {"loss": l, "xent": parts["xent"], "aux": parts["aux"],
+                   "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,90 @@
+"""Unit tests for the HLO analyzer: trip counts, call-graph multipliers,
+dot FLOPs via symbol lookup, collective wire-byte formulas."""
+import pytest
+
+from repro.analysis import hlo_stats as H
+
+SAMPLE = """\
+HloModule jit_step
+
+%wrapped_compare_computation.1 (p0: s32[], p1: s32[]) -> pred[] {
+  %p0 = s32[] parameter(0)
+  %p1 = s32[] parameter(1)
+  ROOT %cmp = pred[] compare(%p0, %p1), direction=LT
+}
+
+%cond.1 (arg: (s32[], f32[8,16]{1,0})) -> pred[] {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %c5 = s32[] constant(5)
+  ROOT %wc = pred[] fusion(%gte, %c5), kind=kLoop, calls=%wrapped_compare_computation.1
+}
+
+%body.1 (arg: (s32[], f32[8,16]{1,0})) -> (s32[], f32[8,16]{1,0}) {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={{0,1,2,3}}, to_apply=%add_comp
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%ip, %ar)
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.1 (in: f32[8,16]{1,0}) -> f32[8,16]{1,0} {
+  %in = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,16]{1,0}) tuple(%zero, %in)
+  %wh = (s32[], f32[8,16]{1,0}) while(%tup), condition=%cond.1, body=%body.1
+  %ag = f32[32,16]{1,0} all-gather(%in), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_trip_count_and_flop_multiplication():
+    hs = H.analyze(SAMPLE, n_devices=4)
+    # dot: 2 * 8*16 * 16 = 4096 flops, inside a trip-5 while
+    assert hs.dot_flops == pytest.approx(5 * 2 * 8 * 16 * 16)
+
+
+def test_collective_wire_bytes():
+    hs = H.analyze(SAMPLE, n_devices=4)
+    # all-reduce of 8*16*4 bytes, group 4, ring: 2*(3/4)*512 = 768, x5 trips
+    # all-gather out 32*16*4=2048, (3/4)*2048 = 1536, x1
+    assert hs.collective_by_kind["all-reduce"] == pytest.approx(768 * 5)
+    assert hs.collective_by_kind["all-gather"] == pytest.approx(1536)
+    assert hs.collective_by_group[4] == pytest.approx(768 * 5 + 1536)
+    assert hs.n_collectives >= 6
+
+
+def test_wire_byte_formulas():
+    assert H._wire_bytes("all-reduce", 100, 100, 4) == pytest.approx(150)
+    assert H._wire_bytes("all-gather", 25, 100, 4) == pytest.approx(75)
+    assert H._wire_bytes("reduce-scatter", 100, 25, 4) == pytest.approx(75)
+    assert H._wire_bytes("collective-permute", 100, 100, 4) == 100
+    assert H._wire_bytes("all-reduce", 100, 100, 1) == 0.0
+
+
+def test_roofline_model_flops_sane():
+    from repro.analysis.roofline import model_flops
+    from repro.configs.archs import ARCHS
+    from repro.models.model import count_params
+    # train: >= 6*N*D matmul floor
+    n = count_params(ARCHS["minitron-8b"], active_only=True)
+    d = 256 * 4096
+    assert model_flops("minitron-8b", "train_4k") >= 6.0 * n * d
+    # MoE uses active params (much smaller than total)
+    tot = count_params(ARCHS["granite-moe-3b-a800m"])
+    act = count_params(ARCHS["granite-moe-3b-a800m"], active_only=True)
+    assert act < 0.6 * tot
+    # decode is per-token
+    assert model_flops("minitron-8b", "decode_32k") < \
+        model_flops("minitron-8b", "train_4k") / 1000

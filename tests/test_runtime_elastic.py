@@ -1,0 +1,154 @@
+"""Elastic-runtime tests: checkpoint/restart equivalence, WI-driven elastic
+resize under eviction, harvest grow, throttle, straggler detection.
+
+Resize tests run in a subprocess with 8 virtual host devices so the mesh can
+actually change shape (the main test process keeps 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.runtime.straggler import StragglerDetector
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+COMMON = textwrap.dedent("""
+    import json, os, tempfile
+    import jax, numpy as np
+    from repro.configs.archs import smoke_config
+    from repro.configs.base import RunConfig
+    from repro.core.global_manager import GlobalManager
+    from repro.runtime.trainer import WITrainer
+    from repro.runtime.faults import FaultInjector
+    cfg = smoke_config("minitron-8b")
+    rcfg = RunConfig(model=cfg, learning_rate=1e-3, warmup_steps=5,
+                     total_steps=200)
+""")
+
+
+def test_elastic_shrink_and_grow_under_wi_events():
+    res = run_sub(COMMON + textwrap.dedent("""
+        gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+        d = tempfile.mkdtemp()
+        tr = WITrainer(rcfg, gm, ckpt_dir=d, model_axis=2, ckpt_every=5,
+                       batch_override=8, seq_override=32)
+        inj = FaultInjector(gm, "train-job")
+        assert tr.dp == 4 and len(tr.active_devices) == 8
+        tr.run(4)
+        inj.evict(n_devices=4)            # lose half the fleet
+        tr.run(8)
+        dp_after_evict = tr.dp
+        inj.offer_capacity(n_devices=4)   # harvest offer: grow back
+        tr.run(12)
+        dp_after_grow = tr.dp
+        losses = [m["loss"] for m in tr.metrics_log]
+        evs = [e["kind"] for e in tr.events_log]
+        print("RESULT " + json.dumps({
+            "dp_evict": dp_after_evict, "dp_grow": dp_after_grow,
+            "losses": losses, "events": evs,
+            "final_step": tr.step}))
+    """))
+    assert res["dp_evict"] == 2
+    assert res["dp_grow"] == 4
+    assert res["final_step"] == 12
+    assert "eviction_notice" in res["events"]
+    assert "resize" in res["events"]
+    assert all(np.isfinite(l) for l in res["losses"])
+    # loss continues to go down across the resizes
+    assert np.mean(res["losses"][-3:]) < np.mean(res["losses"][:3])
+
+
+def test_checkpoint_restart_equivalence():
+    """Same data stream + restart from checkpoint == uninterrupted run."""
+    res = run_sub(COMMON + textwrap.dedent("""
+        gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+        d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+        tr = WITrainer(rcfg, gm, ckpt_dir=d1, model_axis=2, ckpt_every=4,
+                       batch_override=8, seq_override=32)
+        tr.run(12)
+        uninterrupted = [m["loss"] for m in tr.metrics_log]
+
+        gm2 = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+        tr2 = WITrainer(rcfg, gm2, ckpt_dir=d2, model_axis=2, ckpt_every=4,
+                        batch_override=8, seq_override=32)
+        tr2.run(8)                      # checkpoint lands at step 8
+        tr2.ckpt.wait()
+        del tr2
+        gm3 = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+        tr3 = WITrainer(rcfg, gm3, ckpt_dir=d2, model_axis=2, ckpt_every=4,
+                        batch_override=8, seq_override=32)
+        assert tr3.step == 8, tr3.step
+        tr3.run(12)
+        resumed = [m["loss"] for m in tr3.metrics_log]
+        print("RESULT " + json.dumps({
+            "uninterrupted": uninterrupted[8:], "resumed": resumed}))
+    """))
+    np.testing.assert_allclose(res["uninterrupted"], res["resumed"],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_throttle_changes_microbatching():
+    res = run_sub(COMMON + textwrap.dedent("""
+        gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+        d = tempfile.mkdtemp()
+        tr = WITrainer(rcfg, gm, ckpt_dir=d, model_axis=2, ckpt_every=50,
+                       batch_override=8, seq_override=32)
+        inj = FaultInjector(gm, "train-job")
+        tr.run(2)
+        mb0 = tr.pcfg.microbatch
+        inj.throttle()
+        tr.run(4)
+        mb1 = tr.pcfg.microbatch
+        inj.unthrottle()
+        tr.run(6)
+        mb2 = tr.pcfg.microbatch
+        losses = [m["loss"] for m in tr.metrics_log]
+        print("RESULT " + json.dumps(
+            {"mb": [mb0, mb1, mb2], "losses": losses}))
+    """))
+    assert res["mb"] == [0, 2, 0]
+    assert all(np.isfinite(l) for l in res["losses"])
+
+
+def test_runtime_hints_published():
+    res = run_sub(COMMON + textwrap.dedent("""
+        gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+        d = tempfile.mkdtemp()
+        tr = WITrainer(rcfg, gm, ckpt_dir=d, model_axis=2, ckpt_every=4,
+                       batch_override=8, seq_override=32)
+        tr.run(6)
+        eff = gm.effective_hints("train-job", "rack0/host0/vm0")
+        print("RESULT " + json.dumps({
+            "preempt": eff["preemptibility_pct"],
+            "fwd": tr.local.stats["vm_hints_forwarded"]}))
+    """))
+    assert res["fwd"] >= 6
+    assert res["preempt"] in (40.0, 90.0)
+
+
+def test_straggler_detector():
+    det = StragglerDetector(min_samples=3, threshold=1.4)
+    for i in range(10):
+        for h in ("h0", "h1", "h2", "h3"):
+            det.record(h, 100.0 + (i % 3))
+        det.record("h4", 180.0)
+    assert det.stragglers() == ["h4"]
+    assert det.slowdown("h4") == pytest.approx(1.8, abs=0.1)
+    assert det.slowdown("h0") == pytest.approx(1.0, abs=0.05)

@@ -1,0 +1,140 @@
+"""Tests for the cluster simulator + paper-evaluation reproductions.
+
+Tolerance bands are generous where the paper's inputs are non-public
+(production traces); exact where the math is deterministic (pricing,
+provider-scale model).
+"""
+import pytest
+
+from repro.core import hints as H
+from repro.core.global_manager import GlobalManager
+from repro.core.optimizations import (HarvestManager, MADatacenterManager,
+                                      SpotManager)
+from repro.sim.cluster import VM, Cluster
+from repro.sim.engine import Engine
+from repro.sim.provider_scale import (FIGURE5_CONTRIB, PAPER_CARBON_SAVING,
+                                      PAPER_TOTAL_SAVING, evaluate)
+from repro.sim.workload import (TABLE1_TARGETS, core_weighted_marginals,
+                                sample_population)
+
+
+def test_engine_orders_events():
+    e = Engine()
+    seen = []
+    e.at(2.0, lambda: seen.append("b"))
+    e.at(1.0, lambda: seen.append("a"))
+    e.after(0.5, lambda: seen.append("first"))
+    e.run(until=10.0)
+    assert seen == ["first", "a", "b"]
+
+
+def test_table1_marginals_reproduced():
+    pop = sample_population(20_000, seed=3)
+    marg = core_weighted_marginals(pop)
+    for attr, target in TABLE1_TARGETS.items():
+        tot = sum(target.values())
+        for k, frac in target.items():
+            got = marg[attr].get(k, 0.0)
+            assert got == pytest.approx(frac / tot, abs=0.04), (attr, k)
+
+
+def test_provider_scale_reproduces_paper():
+    r = evaluate()
+    # independence baseline within 2pp of the paper's totals
+    assert r.saving_independence == pytest.approx(PAPER_TOTAL_SAVING, abs=0.02)
+    assert r.carbon_independence == pytest.approx(PAPER_CARBON_SAVING,
+                                                  abs=0.02)
+    # calibrated hits the total by construction
+    assert r.saving_calibrated == pytest.approx(PAPER_TOTAL_SAVING, abs=0.002)
+    # per-opt Figure-5 contributions within 1pp each (independence case)
+    for opt, tgt in FIGURE5_CONTRIB.items():
+        assert r.contrib_independence[opt] == pytest.approx(tgt, abs=0.011), \
+            opt
+    # waterfall identity: contributions sum to the total saving
+    assert sum(r.contrib_independence.values()) == pytest.approx(
+        r.saving_independence, rel=1e-9)
+
+
+def test_bigdata_case_study_figure4():
+    from repro.sim.casestudies.bigdata import run_all
+    r = run_all(seed=0)
+    assert r["regular"]["slowdown_x"] == 1.0
+    assert r["wi_deploy"]["slowdown_x"] == pytest.approx(2.1, abs=0.25)
+    assert r["wi_full"]["slowdown_x"] == pytest.approx(1.7, abs=0.2)
+    # runtime hints reduce the slowdown (paper: by ~21%)
+    rel = 1 - r["wi_full"]["slowdown_x"] / r["wi_deploy"]["slowdown_x"]
+    assert 0.1 < rel < 0.3
+    assert r["wi_deploy"]["cost_saving"] == pytest.approx(0.926, abs=0.02)
+    assert r["wi_full"]["cost_saving"] == pytest.approx(0.935, abs=0.02)
+    assert r["wi_full"]["cost_saving"] > r["wi_deploy"]["cost_saving"]
+    assert r["wi_full"]["jobs_done"] == 100
+
+
+def test_microservices_case_study():
+    from repro.sim.casestudies.microservices import run
+    r = run()
+    assert r["baseline"]["p99_ms"] == pytest.approx(376, abs=25)
+    assert r["summary"]["latency_improvement"] == pytest.approx(0.133,
+                                                                abs=0.04)
+    assert r["summary"]["cost_saving"] == pytest.approx(0.44, abs=0.03)
+
+
+def test_videoconf_case_study():
+    from repro.sim.casestudies.videoconf import run
+    r = run()
+    s = r["summary"]
+    assert s["cost_saving"] == pytest.approx(0.263, abs=0.03)
+    assert s["carbon_saving"] == pytest.approx(0.51, abs=0.01)
+    assert s["rate_improvement"] == pytest.approx(0.354, abs=0.06)
+    assert s["spike_rate_improvement"] == pytest.approx(0.22, abs=0.05)
+    assert s["wi_delayed_events"] == 0
+    assert s["region"] == "region-green"
+
+
+def test_spot_manager_prefers_preemptible_victims():
+    gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+    gm.register_workload("a", {"preemptibility_pct": 90.0})
+    gm.register_workload("b", {"preemptibility_pct": 25.0})
+    cl = Cluster()
+    cl.add_server("s0", 64)
+    cl.add_vm(VM("vm-a", "a", "s0", 8, spot=True))
+    cl.add_vm(VM("vm-b", "b", "s0", 8, spot=True))
+    spot = SpotManager(gm)
+    acts = spot.reclaim(cl.view(), cores_needed=8)
+    assert len(acts) == 1 and acts[0].vm == "vm-a"
+    evs = gm.events_for("a")
+    assert evs and evs[0]["event"] == "eviction_notice"
+    assert evs[0]["deadline_s"] == 30.0
+
+
+def test_madc_power_event_prefers_low_availability():
+    gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+    gm.register_workload("lowav", {"availability_nines": 2.0,
+                                   "scale_up_down": True})
+    gm.register_workload("highav", {"availability_nines": 5.0})
+    cl = Cluster()
+    cl.add_server("s0", 32)
+    cl.add_vm(VM("vm-l", "lowav", "s0", 16))
+    cl.add_vm(VM("vm-h", "highav", "s0", 16))
+    ma = MADatacenterManager(gm)
+    acts = ma.power_event(cl.view(), "s0", shed_frac=0.25)
+    assert acts and acts[0].vm == "vm-l" and acts[0].kind == "throttle"
+    assert not any(a.vm == "vm-h" for a in acts)
+
+
+def test_harvest_rebalance_grow_and_shrink():
+    gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+    gm.register_workload("h", {"preemptibility_pct": 60.0,
+                               "scale_up_down": True,
+                               "delay_tolerance_ms": 100.0})
+    cl = Cluster()
+    cl.add_server("s0", 64)
+    cl.add_vm(VM("vm-h", "h", "s0", 8, harvest=True))
+    hm = HarvestManager(gm)
+    acts = hm.rebalance(cl.view())
+    assert acts and acts[0].kind == "grow"
+    # now oversubscribe the server: shrink expected
+    cl.add_vm(VM("vm-big", "x", "s0", 60))
+    cl.vms["vm-h"].harvested = 20.0
+    acts = hm.rebalance(cl.view())
+    assert acts and acts[0].kind == "shrink"

@@ -1,0 +1,51 @@
+"""End-to-end behaviour test for the paper's system: a training job runs
+under WI, publishes hints, receives an eviction notice from the Spot
+manager, checkpoints, shrinks, and keeps training with the loss descending.
+
+(The full elastic matrix is in tests/test_runtime_elastic.py; this is the
+single-process integration smoke across all layers: WI core + optimization
+manager + runtime + model + optimizer + checkpointing + data.)
+"""
+import tempfile
+
+import numpy as np
+
+from repro.configs.archs import smoke_config
+from repro.configs.base import RunConfig
+from repro.core import hints as H
+from repro.core.global_manager import GlobalManager
+from repro.core.optimizations import SpotManager
+from repro.runtime.trainer import WITrainer
+from repro.sim.cluster import VM, Cluster
+
+
+def test_wi_training_system_end_to_end():
+    cfg = smoke_config("minitron-8b")
+    rcfg = RunConfig(model=cfg, learning_rate=2e-3, warmup_steps=5,
+                     total_steps=100)
+    gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+    tr = WITrainer(rcfg, gm, ckpt_dir=tempfile.mkdtemp(), model_axis=1,
+                   ckpt_every=6, batch_override=8, seq_override=32)
+    tr.run(8)
+
+    # the job's runtime hints are visible to the platform
+    eff = gm.effective_hints("train-job", "rack0/host0/vm0")
+    assert eff["preemptibility_pct"] in (40.0, 90.0)
+    assert gm.aggregate("workload")["train-job"]["n"] >= 1
+
+    # a real optimization manager issues the eviction via the hint channel
+    cl = Cluster()
+    cl.add_server("rack0/host0", 64)
+    cl.add_vm(VM("vm0", "train-job", "rack0/host0", 8, spot=True))
+    spot = SpotManager(gm)
+    acts = spot.reclaim(cl.view(), cores_needed=8)
+    assert acts and acts[0].workload == "train-job"
+
+    tr.run(16)          # trainer consumed the notice and kept going
+    kinds = [e["kind"] for e in tr.events_log]
+    assert "eviction_notice" in kinds
+    assert "checkpoint" in kinds
+    losses = [m["loss"] for m in tr.metrics_log]
+    assert all(np.isfinite(l) for l in losses)
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    assert tr.ckpt.latest_step() is not None
