@@ -119,6 +119,50 @@ def f5_savings():
                 f"calibrated={r.saving_calibrated:.3f}(rho={r.rho:.3f})")
 
 
+def sched_scale():
+    """Platform-scheduler scale: pack >=10k VMs onto >=2k servers, report
+    placement throughput, then survive an eviction storm with every hinted
+    notice window honored."""
+    import random
+    from repro.sched import Scheduler
+    from repro.sim.cluster import VM
+    from repro.sim.workload import sample_population
+
+    N_SERVERS, CORES, N_VMS, N_WORKLOADS = 2048, 64, 10_500, 256
+    s = Scheduler(publish_decisions=True)
+    for i in range(N_SERVERS):
+        region = "region-0" if i % 2 == 0 else "region-green"
+        s.cluster.add_server(f"s{i}", CORES, region=region)
+    pop = sample_population(N_WORKLOADS, seed=11)
+    for w in pop:
+        s.gm.register_workload(w.name, w.hints())
+    rng = random.Random(11)
+    for i in range(N_VMS):
+        w = pop[i % N_WORKLOADS]
+        cores = rng.choice((2.0, 4.0, 8.0, 8.0, 16.0))
+        s.submit(VM(f"vm{i}", w.name, "", cores,
+                    util_p95=rng.uniform(0.1, 0.9),
+                    spot=w.preemptibility >= 20.0))
+    t0 = time.perf_counter()
+    s.schedule_pending()
+    dt = time.perf_counter() - t0
+    placed = s.stats["placed"]
+    rate = placed / dt if dt else float("inf")
+    # eviction storm on top of the packed cluster
+    for wave in range(4):
+        region = "region-0" if wave % 2 == 0 else "region-green"
+        s.engine.at(30.0 + wave * 60.0,
+                    lambda r=region: s.capacity_crunch(r, 1500.0))
+    s.run_until(30.0 + 4 * 60.0 + 600.0)
+    violations = len(s.evictor.violations())
+    assert placed >= 10_000, f"only placed {placed}"
+    assert violations == 0, f"{violations} notice violations"
+    return dt * 1e6, (f"placed={placed}/{N_VMS},servers={N_SERVERS},"
+                      f"placements_per_s={rate:.0f},"
+                      f"storm_evictions={s.evictor.stats['kills']},"
+                      f"storm_violations={violations}")
+
+
 def wi_hint_throughput():
     """Scalability requirement (§3.2): hint ingest rate through the bus."""
     from repro.core.global_manager import GlobalManager
@@ -166,9 +210,23 @@ def roofline_table():
                 f"@{worst.roofline_fraction:.1%}")
 
 
+def sched_scenarios():
+    """Eviction-storm + capacity-crunch scenarios (sched/ subsystem)."""
+    from repro.sim.casestudies.capacity_crunch import run as run_crunch
+    from repro.sim.casestudies.eviction_storm import run as run_storm
+    us, storm = _timed(lambda: run_storm(seed=0))
+    crunch = run_crunch(seed=0)
+    assert storm["violations"] == 0 and crunch["eviction_violations"] == 0
+    return us, (f"storm_evictions={storm['evictions']},"
+                f"storm_violations={storm['violations']},"
+                f"crunch_placed={crunch['placed_after_crunch']}"
+                f"/{crunch['surge_vms']},"
+                f"crunch_migrations={crunch['defrag_migrations']}")
+
+
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
-       s62_microservices, s63_videoconf, f5_savings, wi_hint_throughput,
-       kernel_flash, roofline_table]
+       s62_microservices, s63_videoconf, f5_savings, sched_scale,
+       sched_scenarios, wi_hint_throughput, kernel_flash, roofline_table]
 
 
 def main() -> None:

@@ -123,12 +123,14 @@ class Bus:
             out: List[Record] = []
             for p, part in enumerate(parts):
                 start = offsets[p]
-                for off in range(start, min(len(part.log),
-                                            start + max_records - len(out))):
+                end = min(len(part.log), start + max_records - len(out))
+                for off in range(start, end):
                     k, v, ts = part.log[off]
                     out.append(Record(topic, p, off, k, v, ts))
-                if out and out[-1].partition == p:
-                    offsets[p] = out[-1].offset + 1
+                # advance this partition's group offset by exactly what was
+                # delivered, independent of where its records sit in `out`
+                if end > start:
+                    offsets[p] = end
                 if len(out) >= max_records:
                     break
             return out

@@ -47,6 +47,9 @@ class GlobalManager:
         }
         self._seq = 0
         self.stats = defaultdict(int)
+        # callbacks fired on every accepted set_hints(workload) — covers the
+        # direct-store runtime path that never touches the bus
+        self.hint_listeners: List[Callable[[str], None]] = []
         # ingest runtime hints published by local managers
         self.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_runtime_hint)
 
@@ -98,6 +101,8 @@ class GlobalManager:
                  else H.TOPIC_RUNTIME_HINTS)
         if scope == H.Scope.DEPLOYMENT:     # runtime hints already on the bus
             self.bus.publish(topic, json.loads(rec.to_json()), key=workload)
+        for cb in self.hint_listeners:
+            cb(workload)
         self.stats["accepted"] += 1
         return True
 

@@ -157,3 +157,7 @@ class PlatformHint:
 TOPIC_DEPLOY_HINTS = "wi.hints.deploy"
 TOPIC_RUNTIME_HINTS = "wi.hints.runtime"
 TOPIC_PLATFORM_HINTS = "wi.hints.platform"
+# Platform-scheduler topics (sched/ subsystem): per-decision telemetry and
+# the authoritative eviction notice/kill stream.
+TOPIC_SCHED_DECISIONS = "wi.sched.decisions"
+TOPIC_EVICTIONS = "wi.sched.evictions"

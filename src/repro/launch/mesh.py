@@ -1,5 +1,9 @@
 """Mesh construction.  Functions, not module-level constants — importing this
 module never touches jax device state.
+
+``axis_types`` is deliberately not passed: newer jax defaults every axis to
+``AxisType.Auto`` already, and older jax (<0.5) has neither the enum nor the
+kwarg — omitting it is the one spelling that works everywhere.
 """
 from __future__ import annotations
 
@@ -12,17 +16,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     """The production mesh: one v5e pod (16x16) or two pods (2x16x16)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_mesh(pcfg: ParallelConfig):
-    return jax.make_mesh(
-        pcfg.mesh_shape(), pcfg.axis_names(),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(pcfg.axis_names()))
+    return jax.make_mesh(pcfg.mesh_shape(), pcfg.axis_names())
 
 
 def local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (virtual) devices this host exposes."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,14 @@
+"""Hint-aware platform scheduler: placement, admission control, and the
+eviction pipeline that enact WI hints at cluster scale (the platform half
+the paper's §2 optimizations assume exists)."""
+from repro.sched.admission import AdmissionController
+from repro.sched.evictor import (DEFAULT_NOTICE_S, EvictionPipeline,
+                                 EvictionTicket, notice_window_s)
+from repro.sched.placement import Decision, Placer, spread_limit
+from repro.sched.scheduler import Scheduler
+
+__all__ = [
+    "AdmissionController", "DEFAULT_NOTICE_S", "Decision", "EvictionPipeline",
+    "EvictionTicket", "Placer", "Scheduler", "notice_window_s",
+    "spread_limit",
+]

@@ -1,0 +1,186 @@
+"""Eviction pipeline: from optimization-manager actions to honored notices.
+
+``SpotManager.reclaim`` and ``MADatacenterManager.power_event`` emit
+``Action("evict", ...)`` lists but nothing in the seed repo ever killed a VM
+— or guaranteed the workload its promised warning.  The pipeline closes the
+loop:
+
+  1. for each evict action, the notice window is the *maximum* of what the
+     issuing manager promised (``payload["after_s"]``) and the workload's
+     hinted minimum (extension hint ``x-eviction-notice-s``, defaulting to
+     the paper's 30 s Spot notice) — a workload can buy itself more warning
+     but the platform never gives less than promised;
+  2. the notice is published immediately: a platform hint
+     (EVICTION_NOTICE, delivered to VM endpoints via local managers) plus an
+     authoritative record on ``wi.sched.evictions``;
+  3. a deadline ladder runs on the sim ``Engine``: a reminder at half the
+     window, the kill exactly at the deadline.  Cancellation (capacity
+     recovered) any time before the kill leaves the VM running.
+
+Every completed eviction is logged with its achieved lead time so scenarios
+and tests can assert the invariant *lead_time >= notice window* exactly.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import hints as H
+from repro.sim.cluster import Cluster
+from repro.sim.engine import Engine
+
+DEFAULT_NOTICE_S = 30.0             # paper §2.2: Spot eviction notice
+
+
+def notice_window_s(eff_hints: Dict[str, Any],
+                    default: float = DEFAULT_NOTICE_S) -> float:
+    """The workload's hinted minimum eviction notice, in seconds."""
+    v = eff_hints.get("x-eviction-notice-s", default)
+    try:
+        return max(0.0, float(v))
+    except (TypeError, ValueError):
+        return default
+
+
+@dataclass
+class EvictionTicket:
+    vm_id: str
+    workload: str
+    resource: str               # "server/vm"
+    notice_s: float
+    issued_t: float
+    kill_t: float
+    source: str = ""            # which manager asked (spot / ma_datacenters)
+    cancelled: bool = False
+    killed: bool = False
+    killed_t: float = -1.0
+
+    @property
+    def lead_time_s(self) -> float:
+        return (self.killed_t - self.issued_t) if self.killed else -1.0
+
+
+class EvictionPipeline:
+    def __init__(self, gm, cluster: Cluster, engine: Engine,
+                 release_cb: Optional[Callable] = None,
+                 default_notice_s: float = DEFAULT_NOTICE_S):
+        self.gm = gm
+        self.cluster = cluster
+        self.engine = engine
+        self.release_cb = release_cb        # e.g. Placer.unplace
+        self.default_notice_s = default_notice_s
+        self.tickets: Dict[str, EvictionTicket] = {}
+        self.log: List[EvictionTicket] = []
+        self.stats: Dict[str, int] = defaultdict(int)
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, actions: List, source: str = "sched"
+               ) -> List[EvictionTicket]:
+        """Schedule every evict action; other action kinds pass through."""
+        out = []
+        for a in actions:
+            if getattr(a, "kind", None) != "evict":
+                continue
+            t = self._schedule(a, source)
+            if t is not None:
+                out.append(t)
+        return out
+
+    def _schedule(self, action, source: str) -> Optional[EvictionTicket]:
+        vm = self.cluster.vms.get(action.vm)
+        if vm is None or not vm.alive:
+            self.stats["skipped_gone"] += 1
+            return None
+        if action.vm in self.tickets:
+            self.stats["skipped_already_pending"] += 1
+            return None
+        resource = f"{vm.server}/{vm.vm_id}"
+        eff = self.gm.effective_hints(vm.workload, resource)
+        notice = max(float(action.payload.get("after_s", 0.0)),
+                     notice_window_s(eff, self.default_notice_s))
+        now = self.engine.clock.t
+        ticket = EvictionTicket(vm.vm_id, vm.workload, resource, notice,
+                                issued_t=now, kill_t=now + notice,
+                                source=source)
+        self.tickets[vm.vm_id] = ticket
+        self.gm.checker.note_eviction_pending(resource)
+        self.gm.publish_platform_hint(H.PlatformHint(
+            event=H.PlatformEvent.EVICTION_NOTICE.value, workload=vm.workload,
+            resource=resource, deadline_s=notice,
+            payload={"cores": vm.cores, "source": source},
+            source_opt="evictor"))
+        self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+            "event": "notice", "vm": vm.vm_id, "workload": vm.workload,
+            "resource": resource, "notice_s": notice, "t": now,
+            "kill_t": ticket.kill_t, "source": source}, key=vm.vm_id)
+        # deadline ladder: reminder at half window, kill at the deadline
+        if notice > 0:
+            self.engine.at(now + notice / 2.0,
+                           lambda t=ticket: self._remind(t))
+        self.engine.at(ticket.kill_t, lambda t=ticket: self._kill(t))
+        self.stats["notices"] += 1
+        return ticket
+
+    # -- ladder -------------------------------------------------------------
+    def _remind(self, ticket: EvictionTicket):
+        if ticket.cancelled or ticket.killed:
+            return
+        remaining = ticket.kill_t - self.engine.clock.t
+        self.gm.publish_platform_hint(H.PlatformHint(
+            event=H.PlatformEvent.EVICTION_NOTICE.value,
+            workload=ticket.workload, resource=ticket.resource,
+            deadline_s=remaining, payload={"reminder": True},
+            source_opt="evictor"))
+        self.stats["reminders"] += 1
+
+    def _kill(self, ticket: EvictionTicket):
+        if ticket.cancelled or ticket.killed:
+            return
+        vm = self.cluster.vms.get(ticket.vm_id)
+        if (vm is not None and vm.alive
+                and f"{vm.server}/{vm.vm_id}" != ticket.resource):
+            # the VM moved since the notice (migration / failover): the
+            # capacity the eviction was meant to free is already free
+            self.cancel(ticket.vm_id)
+            return
+        if vm is not None and vm.alive:
+            if self.release_cb is not None:
+                self.release_cb(vm)
+            self.cluster.kill_vm(ticket.vm_id)
+        ticket.killed = True
+        ticket.killed_t = self.engine.clock.t
+        self.tickets.pop(ticket.vm_id, None)
+        self.gm.checker.note_eviction_done(ticket.resource)
+        self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+            "event": "evicted", "vm": ticket.vm_id,
+            "workload": ticket.workload, "resource": ticket.resource,
+            "lead_time_s": ticket.lead_time_s, "notice_s": ticket.notice_s,
+            "t": ticket.killed_t, "source": ticket.source}, key=ticket.vm_id)
+        self.log.append(ticket)
+        self.stats["kills"] += 1
+
+    def cancel(self, vm_id: str) -> bool:
+        """Capacity recovered before the deadline: the VM keeps running."""
+        ticket = self.tickets.pop(vm_id, None)
+        if ticket is None or ticket.killed:
+            return False
+        ticket.cancelled = True
+        self.gm.checker.note_eviction_done(ticket.resource)
+        self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+            "event": "cancelled", "vm": vm_id, "workload": ticket.workload,
+            "resource": ticket.resource, "t": self.engine.clock.t},
+            key=vm_id)
+        self.stats["cancellations"] += 1
+        return True
+
+    # -- invariants ---------------------------------------------------------
+    def violations(self) -> List[EvictionTicket]:
+        """Completed evictions whose achieved lead time undercut the hinted
+        notice window (must be empty — the acceptance invariant)."""
+        return [t for t in self.log
+                if t.killed and t.lead_time_s < t.notice_s - 1e-9]
+
+    def min_lead_time_s(self) -> float:
+        leads = [t.lead_time_s for t in self.log if t.killed]
+        return min(leads) if leads else float("inf")

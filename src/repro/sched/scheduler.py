@@ -1,0 +1,254 @@
+"""The hint-aware platform scheduler: the platform half of WI.
+
+Wires the pieces together and runs the main loop:
+
+  * a pending-VM queue (on the cluster) drained first-fit-decreasing
+    through the hint-aware ``Placer`` + ``AdmissionController``;
+  * bus subscriptions on the deployment- and runtime-hint topics: a hint
+    change marks the workload dirty, invalidates the placer's hint cache,
+    and the next tick re-evaluates region placement (e.g. a workload that
+    just became region-independent migrates to the cheaper region);
+  * capacity crunch handling: defragment by migrating region-agnostic VMs
+    out of the crunched region, then reclaim spot capacity through the
+    ``EvictionPipeline`` (notices honored, kills on the engine's clock);
+  * maintenance-aware power events routed from ``MADatacenterManager``;
+  * region failover: displaced VMs are re-queued and re-placed on
+    surviving regions;
+  * per-decision telemetry on ``wi.sched.decisions`` plus aggregate stats.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional
+
+from repro.core import hints as H
+from repro.core.global_manager import GlobalManager
+from repro.core.optimizations import MADatacenterManager, SpotManager
+from repro.core.pricing import applicable
+from repro.sim.cluster import VM, Cluster
+from repro.sim.engine import Engine
+
+from repro.sched.admission import AdmissionController
+from repro.sched.evictor import EvictionPipeline
+from repro.sched.placement import Decision, Placer
+
+
+class Scheduler:
+    def __init__(self, gm: Optional[GlobalManager] = None,
+                 cluster: Optional[Cluster] = None,
+                 engine: Optional[Engine] = None,
+                 default_region: str = "region-0",
+                 objective: str = "price",
+                 oversub_ratio: float = 1.25,
+                 default_notice_s: float = 30.0,
+                 max_migrations_per_tick: int = 64,
+                 decision_log_cap: int = 10_000,
+                 publish_decisions: bool = True):
+        self.engine = engine or Engine()
+        self.gm = gm or GlobalManager(clock=self.engine.clock,
+                                      hint_rate_per_s=1e6, hint_burst=1e6)
+        self.cluster = cluster or Cluster()
+        self.admission = AdmissionController(self.cluster, oversub_ratio)
+        self.placer = Placer(self.gm, self.cluster, self.admission,
+                             default_region, objective)
+        self.evictor = EvictionPipeline(self.gm, self.cluster, self.engine,
+                                        release_cb=self.placer.unplace,
+                                        default_notice_s=default_notice_s)
+        self.spot = SpotManager(self.gm, eviction_notice_s=default_notice_s)
+        self.madc = MADatacenterManager(self.gm)
+        self.max_migrations_per_tick = max_migrations_per_tick
+        self.publish_decisions = publish_decisions
+        self.decisions: Deque[Decision] = deque(maxlen=decision_log_cap)
+        self.stats: Dict[str, int] = defaultdict(int)
+        self._dirty: set = set()
+        self.gm.bus.subscribe(H.TOPIC_DEPLOY_HINTS, self._on_hint_change)
+        self.gm.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_hint_change)
+        # direct-store hint path (set_hints with runtime scope never hits
+        # the bus) — without this the placer would keep serving stale hints
+        self.gm.hint_listeners.append(self._mark_dirty)
+
+    def _mark_dirty(self, workload: str):
+        self._dirty.add(workload)
+        self.placer.invalidate(workload)
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, vm: VM):
+        self.cluster.enqueue(vm)
+        self.stats["submitted"] += 1
+
+    # -- hint reactions -----------------------------------------------------
+    def _on_hint_change(self, rec):
+        d = rec.value
+        if isinstance(d, dict) and "workload" in d:
+            self._mark_dirty(d["workload"])
+
+    def react_to_hints(self) -> List[Decision]:
+        """Re-place VMs of workloads whose hints changed: a workload that is
+        (now) region-independent and sits in a worse region migrates."""
+        if not self._dirty:
+            return []
+        dirty, self._dirty = self._dirty, set()
+        moved: List[Decision] = []
+        budget = self.max_migrations_per_tick
+        for vm in list(self.cluster.vms.values()):
+            if budget <= 0:
+                # out of budget: keep the marks so later ticks finish the job
+                self._dirty |= dirty
+                break
+            if not vm.alive or not vm.server or vm.workload not in dirty:
+                continue
+            eff = self.placer.effective(vm.workload)
+            if not applicable("region_agnostic", eff):
+                continue
+            want = self.placer.target_region(vm.workload)
+            here = self.cluster.servers[vm.server].region
+            if want == here:
+                continue
+            d = self.placer.migrate(vm, self.engine.clock.t)
+            if d.placed and d.region != here:
+                self.gm.publish_platform_hint(H.PlatformHint(
+                    event=H.PlatformEvent.MIGRATION_NOTICE.value,
+                    workload=vm.workload, resource=f"{d.server}/{vm.vm_id}",
+                    payload={"from_region": here, "to_region": d.region},
+                    source_opt="sched"))
+                moved.append(d)
+                self._record(d, kind="migrate")
+                budget -= 1
+        self.stats["hint_migrations"] += len(moved)
+        return moved
+
+    # -- the main loop ------------------------------------------------------
+    def schedule_pending(self, max_batch: Optional[int] = None
+                         ) -> List[Decision]:
+        """Drain the pending queue first-fit-decreasing.  Unplaceable VMs
+        return to the queue (they retry next tick / after a crunch)."""
+        batch: List[VM] = []
+        while self.cluster.pending and (max_batch is None
+                                        or len(batch) < max_batch):
+            vm = self.cluster.pending.popleft()
+            if not vm.alive:        # killed while queued (e.g. eviction)
+                self.stats["dropped_dead"] += 1
+                continue
+            batch.append(vm)
+        batch.sort(key=lambda v: v.cores, reverse=True)
+        out: List[Decision] = []
+        now = self.engine.clock.t
+        for vm in batch:
+            d = self.placer.place(vm, now)
+            if d.placed:
+                self.stats["placed"] += 1
+            else:
+                self.cluster.pending.append(vm)
+                self.stats["unplaced"] += 1
+            self._record(d, kind="place")
+            out.append(d)
+        return out
+
+    def tick(self):
+        self.react_to_hints()
+        self.schedule_pending()
+
+    def start(self, period_s: float, until: float):
+        """Run the scheduling loop on the engine clock."""
+        self.engine.every(period_s, self.tick, until)
+
+    def run_until(self, t: float):
+        self.engine.run(until=t)
+
+    # -- capacity crunch ----------------------------------------------------
+    def defragment(self, region: str, cores_needed: float) -> float:
+        """Migrate region-agnostic VMs out of a crunched region.  Returns
+        the nominal cores freed."""
+        freed = 0.0
+        moved = 0
+        for vm in list(self.cluster.vms.values()):
+            if freed >= cores_needed:
+                break
+            if not vm.alive or not vm.server:
+                continue
+            if self.cluster.servers[vm.server].region != region:
+                continue
+            eff = self.placer.effective(vm.workload)
+            if not applicable("region_agnostic", eff):
+                continue
+            here = vm.server
+            d = self.placer.migrate(vm, self.engine.clock.t,
+                                    exclude_region=region)
+            if d.placed and d.server != here:
+                freed += vm.cores
+                moved += 1
+                self._record(d, kind="defrag")
+        self.stats["defrag_migrations"] += moved
+        return freed
+
+    def capacity_crunch(self, region: str, cores_needed: float) -> Dict:
+        """Free `cores_needed` nominal cores in `region`: first defragment
+        (migrate flexible VMs out), then reclaim spot capacity with honored
+        eviction notices."""
+        freed = self.defragment(region, cores_needed)
+        tickets = []
+        if freed < cores_needed:
+            view = self.cluster.view()
+            # restrict reclaim to spot VMs inside the crunched region that
+            # are not already mid-eviction (their cores are spoken for)
+            in_region = {vid: info for vid, info in view["vms"].items()
+                         if vid not in self.evictor.tickets
+                         and view["servers"].get(info["server"],
+                                                 {}).get("region") == region}
+            acts = self.spot.reclaim({**view, "vms": in_region},
+                                     cores_needed - freed)
+            tickets = self.evictor.submit(acts, source="spot")
+            freed += sum(self.cluster.vms[t.vm_id].cores for t in tickets)
+        self.stats["capacity_crunches"] += 1
+        return {"freed_cores": freed, "evictions": len(tickets),
+                "tickets": tickets}
+
+    # -- infrastructure events ---------------------------------------------
+    def power_event(self, server: str, shed_frac: float) -> Dict:
+        """MA-datacenter power event: throttle low-availability VMs, evict
+        preemptible ones (through the notice pipeline)."""
+        view = self.cluster.view()
+        # VMs already mid-eviction must not be re-selected (their cores
+        # would double-count toward the shed target and then be dropped)
+        view = {**view, "vms": {vid: info
+                                for vid, info in view["vms"].items()
+                                if vid not in self.evictor.tickets}}
+        acts = self.madc.power_event(view, server, shed_frac)
+        tickets = self.evictor.submit(acts, source="ma_datacenters")
+        throttles = [a for a in acts if a.kind == "throttle"]
+        self.stats["power_events"] += 1
+        self.stats["power_throttles"] += len(throttles)
+        return {"throttles": len(throttles), "evictions": len(tickets),
+                "tickets": tickets}
+
+    def region_failover(self, region: str) -> List[Decision]:
+        """Region outage: displaced VMs re-queue (front) and re-place on
+        surviving regions; region-fixed workloads stay pending."""
+        displaced = self.cluster.fail_region(region)
+        for vm in displaced:
+            self.placer.unplace(vm)
+            self.cluster.requeue(vm)
+        self.stats["failover_displaced"] += len(displaced)
+        return self.schedule_pending()
+
+    # -- telemetry ----------------------------------------------------------
+    def _record(self, d: Decision, kind: str):
+        self.decisions.append(d)
+        if self.publish_decisions:
+            self.gm.bus.publish(H.TOPIC_SCHED_DECISIONS, {
+                "kind": kind, "vm": d.vm_id, "workload": d.workload,
+                "server": d.server, "region": d.region,
+                "oversubscribed": d.oversubscribed, "reason": d.reason,
+                "t": d.t}, key=d.workload)
+
+    def telemetry(self) -> Dict:
+        alive = [v for v in self.cluster.vms.values() if v.alive and v.server]
+        return {
+            "sched": dict(self.stats),
+            "placer": dict(self.placer.stats),
+            "admission": dict(self.admission.stats),
+            "evictor": dict(self.evictor.stats),
+            "alive_vms": len(alive),
+            "pending_vms": len(self.cluster.pending),
+            "eviction_violations": len(self.evictor.violations()),
+        }

@@ -1,16 +1,24 @@
 """Simulated cluster state: servers, VMs, regions — the "view" dict consumed
-by optimization managers (see core/optimizations/managers.py docstring)."""
+by optimization managers (see core/optimizations/managers.py docstring) and
+driven by the platform scheduler (sched/).
+
+The cluster also owns the pending-VM queue (submitted but not yet placed),
+p95-aware headroom accounting for oversubscribed packing, and region
+failover (mark a region's servers down and hand back the displaced VMs so
+the scheduler can re-place them).
+"""
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 
 @dataclass
 class VM:
     vm_id: str
     workload: str
-    server: str
+    server: str                     # "" while pending (unplaced)
     cores: float
     util_p95: float = 0.5
     spot: bool = False
@@ -26,6 +34,7 @@ class Server:
     cores: float
     region: str = "region-0"
     power_capped: bool = False
+    up: bool = True
 
 
 @dataclass
@@ -39,13 +48,16 @@ class Cluster:
     def __init__(self):
         self.servers: Dict[str, Server] = {}
         self.vms: Dict[str, VM] = {}
+        self.pending: Deque[VM] = deque()
         self.regions: Dict[str, Region] = {
             "region-0": Region("region-0", 1.0, 546.0),
             "region-green": Region("region-green", 0.78, 267.0),
         }
+        self._by_region: Dict[str, List[str]] = {}
 
     def add_server(self, server_id: str, cores: float, region="region-0"):
         self.servers[server_id] = Server(server_id, cores, region)
+        self._by_region.setdefault(region, []).append(server_id)
 
     def add_vm(self, vm: VM):
         self.vms[vm.vm_id] = vm
@@ -53,12 +65,69 @@ class Cluster:
     def remove_vm(self, vm_id: str):
         self.vms.pop(vm_id, None)
 
+    def kill_vm(self, vm_id: str):
+        vm = self.vms.get(vm_id)
+        if vm is not None:
+            vm.alive = False
+
+    # -- pending queue (scheduler feed) -------------------------------------
+    def enqueue(self, vm: VM):
+        """Submit an unplaced VM for the scheduler to place."""
+        vm.server = ""
+        self.pending.append(vm)
+
+    def requeue(self, vm: VM):
+        """Put a displaced VM at the front of the queue (failover priority)."""
+        vm.server = ""
+        self.pending.appendleft(vm)
+
+    # -- accounting ---------------------------------------------------------
     def free_cores(self, server_id: str) -> float:
         used = sum(v.cores + v.harvested for v in self.vms.values()
                    if v.server == server_id and v.alive)
         return self.servers[server_id].cores - used
 
+    def p95_used(self, server_id: str) -> float:
+        """Expected p95 demand: oversubscribed VMs count at p95 utilization,
+        everything else reserves its nominal allocation."""
+        used = 0.0
+        for v in self.vms.values():
+            if v.server != server_id or not v.alive:
+                continue
+            used += (v.cores * v.util_p95 if v.oversubscribed
+                     else v.cores + v.harvested)
+        return used
+
+    def headroom(self, server_id: str) -> float:
+        """p95-aware headroom oversubscription-eligible VMs pack against."""
+        return self.servers[server_id].cores - self.p95_used(server_id)
+
+    def vms_on(self, server_id: str) -> List[VM]:
+        return [v for v in self.vms.values()
+                if v.server == server_id and v.alive]
+
+    # -- regions ------------------------------------------------------------
+    def servers_in_region(self, region: str) -> List[str]:
+        return self._by_region.get(region, [])
+
+    def fail_server(self, server_id: str) -> List[VM]:
+        """Mark a server down; return its displaced (still-alive) VMs."""
+        self.servers[server_id].up = False
+        return self.vms_on(server_id)
+
+    def fail_region(self, region: str) -> List[VM]:
+        """Region outage: every server down; displaced VMs returned so the
+        scheduler can fail them over to surviving regions."""
+        displaced: List[VM] = []
+        for sid in self.servers_in_region(region):
+            displaced.extend(self.fail_server(sid))
+        return displaced
+
     def view(self) -> Dict:
+        used: Dict[str, float] = {}
+        for v in self.vms.values():
+            if v.alive and v.server:
+                used[v.server] = used.get(v.server, 0.0) + v.cores + v.harvested
         return {
             "vms": {v.vm_id: {"workload": v.workload, "server": v.server,
                               "cores": v.cores, "util_p95": v.util_p95,
@@ -67,9 +136,11 @@ class Cluster:
                               "oversubscribed": v.oversubscribed}
                     for v in self.vms.values() if v.alive},
             "servers": {s.server_id: {"cores": s.cores,
-                                      "free_cores": self.free_cores(
-                                          s.server_id),
-                                      "power_cap": s.power_capped}
+                                      "free_cores":
+                                          s.cores - used.get(s.server_id, 0.0),
+                                      "power_cap": s.power_capped,
+                                      "region": s.region,
+                                      "up": s.up}
                         for s in self.servers.values()},
             "regions": {r.name: {"price": r.price,
                                  "carbon_g_kwh": r.carbon_g_kwh}

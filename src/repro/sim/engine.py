@@ -38,5 +38,7 @@ class Engine:
             t, _, fn = heapq.heappop(self._q)
             self.clock.t = t
             fn()
-        self.clock.t = max(self.clock.t, min(until, self.clock.t if not
-                                             self._q else until))
+        # A bounded run always ends exactly at the horizon, even when the
+        # event queue drained early (events beyond `until` stay queued).
+        if until != float("inf"):
+            self.clock.t = max(self.clock.t, until)

@@ -32,8 +32,7 @@ def test_ring_allreduce_matches_psum():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.train.compression import ring_allreduce_q
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.standard_normal((4, 317)).astype(np.float32))
 
@@ -41,8 +40,14 @@ def test_ring_allreduce_matches_psum():
             s, err = ring_allreduce_q(xs[0], "pod", 4, block=64)
             return s[None], err[None]
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
-                                  out_specs=P("pod"), check_vma=False))
+        if hasattr(jax, "shard_map"):       # jax >= 0.5
+            smapped = jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
+                                    out_specs=P("pod"), check_vma=False)
+        else:                               # jax 0.4.x
+            from jax.experimental.shard_map import shard_map
+            smapped = shard_map(body, mesh=mesh, in_specs=P("pod"),
+                                out_specs=P("pod"), check_rep=False)
+        f = jax.jit(smapped)
         s, err = f(x)
         exact = np.asarray(x).sum(0)
         got = np.asarray(s)

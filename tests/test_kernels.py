@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import AttnConfig

@@ -1,0 +1,499 @@
+"""Tests for the hint-aware platform scheduler (src/repro/sched/) plus the
+bus/engine fixes it depends on (multi-partition poll offsets, bounded-run
+clock advance)."""
+import random
+
+import pytest
+
+from repro.core import hints as H
+from repro.core.bus import Bus
+from repro.sched import (AdmissionController, Scheduler, notice_window_s,
+                         spread_limit)
+from repro.sim.cluster import VM, Cluster
+from repro.sim.engine import Engine
+
+
+def make_scheduler(n_servers=4, cores=32, regions=("region-0",)):
+    s = Scheduler()
+    for r in regions:
+        for i in range(n_servers):
+            s.cluster.add_server(f"{r}/s{i}", cores, region=r)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# engine + bus satellites
+# ---------------------------------------------------------------------------
+
+
+def test_engine_run_until_advances_clock_when_queue_drains_early():
+    e = Engine()
+    e.at(3.0, lambda: None)
+    e.run(until=100.0)
+    assert e.clock.t == 100.0
+
+
+def test_engine_run_unbounded_stops_at_last_event():
+    e = Engine()
+    e.at(3.0, lambda: None)
+    e.run()
+    assert e.clock.t == 3.0
+
+
+def test_engine_run_leaves_future_events_queued():
+    e = Engine()
+    seen = []
+    e.at(5.0, lambda: seen.append("early"))
+    e.at(50.0, lambda: seen.append("late"))
+    e.run(until=10.0)
+    assert seen == ["early"] and e.clock.t == 10.0
+    e.run(until=60.0)
+    assert seen == ["early", "late"]
+
+
+def test_bus_poll_multi_partition_exactly_once():
+    bus = Bus(n_partitions=4)
+    sent = []
+    for i in range(37):
+        # keys chosen to hit several partitions; None pins partition 0
+        bus.publish("t", i, key=["a", "b", "c", "d", None][i % 5])
+        sent.append(i)
+    got = []
+    while True:
+        recs = bus.poll("t", "g", max_records=5)
+        if not recs:
+            break
+        got.extend(r.value for r in recs)
+    assert sorted(got) == sent            # no duplicates, no losses
+    assert bus.lag("t", "g") == 0
+
+
+def test_bus_poll_advances_every_partition_in_one_big_poll():
+    bus = Bus(n_partitions=4)
+    for i in range(20):
+        bus.publish("t", i, key=str(i))
+    first = bus.poll("t", "g", max_records=100)
+    assert len(first) == 20
+    assert bus.poll("t", "g", max_records=100) == []
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+
+def test_placement_respects_availability_spread():
+    s = make_scheduler(n_servers=6)
+    s.gm.register_workload("fe", {"availability_nines": 4.0})
+    for i in range(5):
+        s.submit(VM(f"fe-{i}", "fe", "", 4))
+    ds = s.schedule_pending()
+    assert all(d.placed for d in ds)
+    servers = [d.server for d in ds]
+    assert len(set(servers)) == 5         # hard anti-affinity: all distinct
+
+
+def test_spread_limit_ladder():
+    assert spread_limit(5.0) == 1
+    assert spread_limit(4.0) == 1
+    assert spread_limit(3.0) == 2
+    assert spread_limit(2.0) > 1000       # pack freely
+
+
+def test_placement_region_agnostic_goes_to_cheapest_region():
+    s = make_scheduler(n_servers=2, regions=("region-0", "region-green"))
+    s.gm.register_workload("flex", {
+        "region_independent": True, "availability_nines": 2.0})
+    s.gm.register_workload("fixed", {"availability_nines": 2.0})
+    s.submit(VM("v-flex", "flex", "", 4))
+    s.submit(VM("v-fixed", "fixed", "", 4))
+    by_vm = {d.vm_id: d for d in s.schedule_pending()}
+    assert by_vm["v-flex"].region == "region-green"    # price 0.78 < 1.0
+    assert by_vm["v-fixed"].region == "region-0"       # conservative default
+
+
+def test_oversubscription_packs_against_p95_headroom():
+    s = make_scheduler(n_servers=1, cores=32)
+    s.gm.register_workload("burst", {
+        "delay_tolerance_ms": 1000.0, "availability_nines": 2.0})
+    for i in range(12):                    # 48 nominal cores on a 32-core box
+        s.submit(VM(f"b-{i}", "burst", "", 4, util_p95=0.25))
+    ds = s.schedule_pending()
+    placed = [d for d in ds if d.placed]
+    assert len(placed) == 10               # commit cap 1.25x: 40/32 nominal
+    assert all(d.oversubscribed for d in placed)
+    sid = placed[0].server
+    assert s.admission.nominal[sid] > s.cluster.servers[sid].cores
+    assert s.cluster.p95_used(sid) <= s.cluster.servers[sid].cores + 1e-9
+
+
+def test_delay_sensitive_vms_reserve_nominal_cores():
+    s = make_scheduler(n_servers=1, cores=32)
+    s.gm.register_workload("strict", {"availability_nines": 2.0})
+    for i in range(10):
+        s.submit(VM(f"s-{i}", "strict", "", 4, util_p95=0.2))
+    ds = s.schedule_pending()
+    assert sum(d.placed for d in ds) == 8  # 32/4, no oversubscription
+    assert not any(d.oversubscribed for d in ds)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_overcommitted_server():
+    cl = Cluster()
+    cl.add_server("s0", 16)
+    adm = AdmissionController(cl, oversub_ratio=1.25)
+    big = VM("big", "w", "", 16)
+    ok, _ = adm.admit(big, "s0")
+    assert ok
+    big.server = "s0"
+    cl.add_vm(big)
+    ok, reason = adm.admit(VM("one-more", "w", "", 1.0), "s0")
+    assert not ok and reason == "capacity"
+    ok, reason = adm.check(VM("os", "w", "", 8, util_p95=0.1), "s0", True)
+    assert not ok and reason == "oversub_commit_cap"
+
+
+def test_admission_rejects_down_server_and_releases():
+    cl = Cluster()
+    cl.add_server("s0", 16)
+    adm = AdmissionController(cl)
+    vm = VM("v", "w", "s0", 8)
+    assert adm.admit(vm, "s0")[0]
+    cl.servers["s0"].up = False
+    assert adm.admit(VM("v2", "w", "", 8), "s0") == (False, "server_down")
+    adm.release(vm)
+    assert adm.reserved["s0"] == 0.0 and adm.nominal["s0"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# eviction pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_notice_window_helper():
+    assert notice_window_s({}) == 30.0
+    assert notice_window_s({"x-eviction-notice-s": 120.0}) == 120.0
+    assert notice_window_s({"x-eviction-notice-s": "bogus"}) == 30.0
+
+
+def test_eviction_notice_honors_hinted_window():
+    s = make_scheduler(n_servers=2)
+    s.gm.register_workload("sp", {
+        "preemptibility_pct": 80.0, "availability_nines": 1.0,
+        "x-eviction-notice-s": 120.0})
+    for i in range(4):
+        s.submit(VM(f"sp-{i}", "sp", "", 8, spot=True))
+    s.schedule_pending()
+    r = s.capacity_crunch("region-0", cores_needed=16)
+    assert r["evictions"] == 2
+    # notice is on the bus immediately, kill only after the hinted window
+    notices = [rec.value for rec in s.gm.bus.poll(H.TOPIC_EVICTIONS, "t", 50)]
+    assert [n["event"] for n in notices] == ["notice", "notice"]
+    assert all(n["notice_s"] == 120.0 for n in notices)  # > manager's 30s
+    s.run_until(119.0)
+    assert sum(v.alive for v in s.cluster.vms.values()) == 4   # not yet
+    s.run_until(121.0)
+    assert sum(v.alive for v in s.cluster.vms.values()) == 2
+    assert s.evictor.violations() == []
+    assert s.evictor.min_lead_time_s() >= 120.0
+
+
+def test_eviction_cancel_keeps_vm_alive():
+    s = make_scheduler(n_servers=1)
+    s.gm.register_workload("sp", {"preemptibility_pct": 80.0,
+                                  "availability_nines": 1.0})
+    s.submit(VM("sp-0", "sp", "", 8, spot=True))
+    s.schedule_pending()
+    tickets = s.capacity_crunch("region-0", cores_needed=8)["tickets"]
+    assert len(tickets) == 1
+    assert s.evictor.cancel("sp-0")
+    s.run_until(100.0)
+    assert s.cluster.vms["sp-0"].alive
+    assert s.evictor.stats["cancellations"] == 1
+    assert s.evictor.violations() == []
+
+
+def test_power_event_routes_evictions_through_pipeline():
+    s = make_scheduler(n_servers=1)
+    s.gm.register_workload("pre", {
+        "preemptibility_pct": 50.0, "availability_nines": 3.5,
+        "x-eviction-notice-s": 60.0})
+    s.submit(VM("p-0", "pre", "", 16))
+    s.schedule_pending()
+    r = s.power_event("region-0/s0", shed_frac=0.9)
+    assert r["evictions"] == 1
+    s.run_until(61.0)
+    assert not s.cluster.vms["p-0"].alive
+    # manager promised only 10s; the pipeline stretched it to the hint
+    assert s.evictor.log[0].notice_s == 60.0
+    assert s.evictor.violations() == []
+
+
+# ---------------------------------------------------------------------------
+# hint reactions, failover, scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_hint_change_triggers_region_migration():
+    s = make_scheduler(n_servers=2, regions=("region-0", "region-green"))
+    s.gm.register_workload("w", {"availability_nines": 2.0})
+    s.submit(VM("v0", "w", "", 8))
+    ds = s.schedule_pending()
+    assert ds[0].region == "region-0"      # conservative: region-fixed
+    assert s.gm.set_hints("w", "*", {"region_independent": True},
+                          scope=H.Scope.DEPLOYMENT, source="owner")
+    s.tick()
+    assert s.cluster.servers[s.cluster.vms["v0"].server].region == \
+        "region-green"
+    assert s.stats["hint_migrations"] == 1
+
+
+def test_region_failover_replaces_flexible_vms():
+    s = make_scheduler(n_servers=2, regions=("region-0", "region-green"))
+    s.gm.register_workload("flex", {"region_independent": True,
+                                    "availability_nines": 2.0})
+    s.gm.register_workload("fixed", {"availability_nines": 2.0})
+    s.submit(VM("fx", "flex", "", 8))
+    s.submit(VM("fd", "fixed", "", 8))
+    s.schedule_pending()
+    # flex went to region-green; kill that region
+    assert s.cluster.servers[s.cluster.vms["fx"].server].region == \
+        "region-green"
+    s.region_failover("region-green")
+    assert s.cluster.servers[s.cluster.vms["fx"].server].region == "region-0"
+    assert s.cluster.vms["fx"].alive
+
+
+def test_eviction_storm_scenario_has_zero_violations():
+    from repro.sim.casestudies.eviction_storm import run
+    r = run(seed=0)
+    assert r["evictions"] > 50
+    assert r["violations"] == 0
+    assert r["min_lead_s"] >= 30.0
+    assert len(r["evictions_by_window"]) >= 2   # heterogeneous windows hit
+
+
+def test_capacity_crunch_scenario_admits_surge():
+    from repro.sim.casestudies.capacity_crunch import run
+    r = run(seed=0)
+    assert r["placed_before_crunch"] < r["surge_vms"]
+    assert r["placed_after_crunch"] == r["surge_vms"]
+    assert r["defrag_migrations"] > 0
+    assert r["evictions"] > 0
+    assert r["eviction_violations"] == 0
+    assert r["overcommitted_servers"] == 0
+
+
+def test_overlapping_crunches_pick_fresh_victims():
+    s = make_scheduler(n_servers=2)
+    s.gm.register_workload("sp", {
+        "preemptibility_pct": 80.0, "availability_nines": 1.0,
+        "x-eviction-notice-s": 300.0})
+    for i in range(8):
+        s.submit(VM(f"sp-{i}", "sp", "", 8, spot=True))
+    s.schedule_pending()
+    r1 = s.capacity_crunch("region-0", cores_needed=16)
+    assert r1["evictions"] == 2
+    # second wave before the 300s notices mature: must not re-select the
+    # already-ticketed VMs (and claim their cores again) — fresh victims
+    r2 = s.capacity_crunch("region-0", cores_needed=16)
+    assert r2["evictions"] == 2
+    assert len(s.evictor.tickets) == 4
+    assert s.evictor.stats.get("skipped_already_pending", 0) == 0
+
+
+def test_hint_migrations_resume_across_ticks_when_over_budget():
+    s = make_scheduler(n_servers=8, regions=("region-0", "region-green"))
+    s.max_migrations_per_tick = 3
+    s.gm.register_workload("w", {"availability_nines": 2.0})
+    for i in range(8):
+        s.submit(VM(f"v{i}", "w", "", 2))
+    s.schedule_pending()
+    s.gm.set_hints("w", "*", {"region_independent": True},
+                   scope=H.Scope.DEPLOYMENT, source="owner")
+    for _ in range(4):      # 8 migrations at 3/tick need 3 ticks
+        s.tick()
+    regions = {s.cluster.servers[v.server].region
+               for v in s.cluster.vms.values() if v.alive}
+    assert regions == {"region-green"}
+
+
+def test_runtime_scope_hint_update_invalidates_placer_cache():
+    s = make_scheduler(n_servers=2, regions=("region-0", "region-green"))
+    s.gm.register_workload("w", {"availability_nines": 2.0})
+    s.submit(VM("v0", "w", "", 8))
+    assert s.schedule_pending()[0].region == "region-0"
+    # direct-store runtime path: never touches the bus, must still be seen
+    assert s.gm.set_hints("w", "*", {"region_independent": True},
+                          source="owner")       # default scope = RUNTIME
+    s.tick()
+    assert s.cluster.servers[s.cluster.vms["v0"].server].region == \
+        "region-green"
+    s.submit(VM("v1", "w", "", 8))
+    assert s.schedule_pending()[0].region == "region-green"
+
+
+def test_power_event_skips_vms_already_mid_eviction():
+    s = make_scheduler(n_servers=1)
+    # two workloads so four VMs share the server despite the spread limit
+    # (3.5 nines -> max two replicas per workload per server)
+    for w in ("sp-a", "sp-b"):
+        s.gm.register_workload(w, {
+            "preemptibility_pct": 80.0, "availability_nines": 3.5,
+            "x-eviction-notice-s": 300.0})
+        for i in range(2):
+            s.submit(VM(f"{w}-{i}", w, "", 8, spot=True))
+    s.schedule_pending()
+    assert s.capacity_crunch("region-0", cores_needed=8)["evictions"] == 1
+    # power event before the 300s notice matures: must shed its 16 cores
+    # from the three *other* VMs, not re-select (and double-count) the
+    # already-ticketed one
+    r = s.power_event("region-0/s0", shed_frac=0.5)
+    assert r["evictions"] == 2
+    assert s.evictor.stats.get("skipped_already_pending", 0) == 0
+
+
+def test_migrate_displaces_to_pending_when_old_server_died():
+    s = make_scheduler(n_servers=1, regions=("region-0",))
+    s.gm.register_workload("flex", {"region_independent": True,
+                                    "availability_nines": 2.0})
+    s.submit(VM("fx", "flex", "", 8))
+    s.schedule_pending()
+    vm = s.cluster.vms["fx"]
+    old = vm.server
+    s.cluster.servers[old].up = False
+    d = s.placer.migrate(vm, exclude_region="region-0")
+    # nowhere to go and the old slot is down: VM must not ghost-occupy it
+    assert not d.placed and vm.server == ""
+    assert vm in s.cluster.pending
+    assert s.admission.nominal[old] == 0.0
+    assert s.placer.stats["migration_displaced"] == 1
+
+
+def test_eviction_moots_itself_when_vm_migrates_away():
+    s = make_scheduler(n_servers=1, regions=("region-0", "region-green"))
+    s.gm.register_workload("sp", {
+        "preemptibility_pct": 80.0, "availability_nines": 1.0,
+        "delay_tolerance_ms": 60_000.0, "x-eviction-notice-s": 300.0})
+    s.submit(VM("sp-0", "sp", "", 8, spot=True))
+    s.schedule_pending()
+    assert s.capacity_crunch("region-0", 8)["evictions"] == 1
+    # the workload becomes region-independent and migrates before the kill:
+    # the crunched cores are freed already, the eviction must cancel itself
+    assert s.gm.set_hints("sp", "*", {"region_independent": True},
+                          scope=H.Scope.DEPLOYMENT, source="owner")
+    s.tick()
+    vm = s.cluster.vms["sp-0"]
+    assert s.cluster.servers[vm.server].region == "region-green"
+    s.run_until(400.0)
+    assert vm.alive                     # not killed on its new server
+    assert s.evictor.stats["cancellations"] == 1
+    assert s.evictor.violations() == []
+
+
+def test_dead_vm_in_pending_queue_is_never_placed():
+    s = make_scheduler(n_servers=2)
+    s.gm.register_workload("w", {"availability_nines": 2.0})
+    vm = VM("v0", "w", "", 8)
+    s.submit(vm)
+    vm.alive = False                    # dies while still queued
+    assert s.schedule_pending() == []
+    assert s.stats["dropped_dead"] == 1
+    assert all(n == 0.0 for n in s.admission.nominal.values())
+
+
+def test_placer_sees_replicas_of_a_prepopulated_cluster():
+    from repro.sim.cluster import Cluster
+    cl = Cluster()
+    for i in range(3):
+        cl.add_server(f"s{i}", 32)
+    # two four-nines replicas already running, placed by someone else
+    cl.add_vm(VM("old-0", "fe", "s0", 4))
+    cl.add_vm(VM("old-1", "fe", "s1", 4))
+    s = Scheduler(cluster=cl)
+    s.gm.register_workload("fe", {"availability_nines": 4.0})
+    s.submit(VM("new-0", "fe", "", 4))
+    d = s.schedule_pending()[0]
+    assert d.server == "s2"     # anti-affinity vs the pre-existing replicas
+
+
+# ---------------------------------------------------------------------------
+# churn soak
+# ---------------------------------------------------------------------------
+
+
+def _check_invariants(s: Scheduler):
+    ratio = s.admission.oversub_ratio
+    nominal = {}
+    reserved = {}
+    for vm in s.cluster.vms.values():
+        if not vm.alive or not vm.server:
+            continue
+        srv = s.cluster.servers[vm.server]
+        assert srv.up, f"{vm.vm_id} on down server"
+        nominal[vm.server] = nominal.get(vm.server, 0.0) + vm.cores
+        reserved[vm.server] = reserved.get(vm.server, 0.0) + (
+            vm.cores * vm.util_p95 if vm.oversubscribed
+            else vm.cores + vm.harvested)
+    for sid, n in nominal.items():
+        cores = s.cluster.servers[sid].cores
+        assert n <= cores * ratio + 1e-6, f"{sid} over commit cap"
+        assert reserved[sid] <= cores + 1e-6, f"{sid} over p95 capacity"
+        # admission books match cluster ground truth
+        assert abs(s.admission.nominal[sid] - n) < 1e-6
+        assert abs(s.admission.reserved[sid] - reserved[sid]) < 1e-6
+
+
+def test_churn_soak_1k_vms_stays_invariant_clean():
+    rng = random.Random(7)
+    s = Scheduler()
+    for i in range(64):
+        s.cluster.add_server(f"s{i}", 64,
+                             region="region-0" if i % 2 else "region-green")
+    profiles = {
+        "fe": {"availability_nines": 4.0},
+        "svc": {"availability_nines": 3.0, "delay_tolerance_ms": 1000.0},
+        "flex": {"region_independent": True, "availability_nines": 2.0,
+                 "scale_out_in": True, "scale_up_down": True,
+                 "delay_tolerance_ms": 5000.0},
+        "sp": {"preemptibility_pct": 80.0, "availability_nines": 1.0,
+               "delay_tolerance_ms": 60_000.0},
+    }
+    for name, hints in profiles.items():
+        for i in range(4):
+            s.gm.register_workload(f"{name}-{i}", hints)
+    names = [f"{n}-{i}" for n in profiles for i in range(4)]
+    total = 0
+    for i in range(1000):
+        w = names[i % len(names)]
+        s.submit(VM(f"vm{i}", w, "", rng.choice((2.0, 4.0, 8.0)),
+                    util_p95=rng.uniform(0.1, 0.9),
+                    spot=w.startswith("sp")))
+        total += 1
+    s.schedule_pending()
+    _check_invariants(s)
+    # churn: waves of kills, crunches, and re-submissions
+    for wave in range(5):
+        alive = [v for v in s.cluster.vms.values() if v.alive and v.server]
+        for vm in rng.sample(alive, 60):
+            s.placer.unplace(vm)
+            s.cluster.kill_vm(vm.vm_id)
+        region = "region-0" if wave % 2 else "region-green"
+        s.capacity_crunch(region, cores_needed=100.0)
+        for j in range(40):
+            w = names[(wave * 40 + j) % len(names)]
+            s.submit(VM(f"vm{total}", w, "", rng.choice((2.0, 4.0, 8.0)),
+                        util_p95=rng.uniform(0.1, 0.9),
+                        spot=w.startswith("sp")))
+            total += 1
+        s.run_until(s.engine.clock.t + 60.0)
+        s.schedule_pending()
+        _check_invariants(s)
+    assert s.evictor.violations() == []
+    t = s.telemetry()
+    assert t["eviction_violations"] == 0
+    assert t["alive_vms"] + t["pending_vms"] <= total

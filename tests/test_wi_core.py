@@ -4,6 +4,7 @@ import json
 import threading
 
 import pytest
+pytest.importorskip("hypothesis")   # property tests need it; skip cleanly if absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hints as H
