@@ -4,12 +4,28 @@ Prints ``name,us_per_call,derived`` CSV rows (derived = the reproduced
 quantity compared against the paper's value where applicable).
 
     PYTHONPATH=src python -m benchmarks.run [--only t1_survey,...]
+    PYTHONPATH=src python -m benchmarks.run --only sched_scale,sched_scale_xl \
+        --json BENCH_sched.json
+
+``--json PATH`` additionally writes the scheduler-scale metrics
+(placements/s, eviction counts, violation counts) as JSON so the perf
+trajectory is tracked across PRs (committed as ``BENCH_sched.json``).
+
+Scheduler-scale benchmark sizes honor env overrides (used by the CI smoke
+job to run a reduced configuration): ``SCHED_SCALE_SERVERS``,
+``SCHED_SCALE_VMS``, ``SCHED_SCALE_XL_SERVERS``, ``SCHED_SCALE_XL_VMS``.
 """
 from __future__ import annotations
 
 import argparse
+import gc
+import json
+import os
 import sys
 import time
+
+# scheduler-scale metrics stashed by benchmark functions for --json
+JSON_METRICS = {}
 
 
 def _timed(fn, repeats=1):
@@ -19,6 +35,15 @@ def _timed(fn, repeats=1):
         out = fn()
     us = (time.perf_counter() - t0) / repeats * 1e6
     return us, out
+
+
+def _freeze_heap():
+    """Move the fully-built benchmark state out of the GC's working set
+    (the CPython-recommended practice for large static heaps): without
+    this, gen-2 collections rescan hundreds of thousands of sim objects
+    mid-measurement and dominate the timings."""
+    gc.collect()
+    gc.freeze()
 
 
 def t1_survey():
@@ -119,48 +144,92 @@ def f5_savings():
                 f"calibrated={r.saving_calibrated:.3f}(rho={r.rho:.3f})")
 
 
-def sched_scale():
-    """Platform-scheduler scale: pack >=10k VMs onto >=2k servers, report
-    placement throughput, then survive an eviction storm with every hinted
-    notice window honored."""
+def _sched_scale_run(name, n_servers, cores, n_vms, n_workloads, regions,
+                     storm_waves, storm_cores, seed=11):
+    """Shared body for the scheduler scale benchmarks: pack ``n_vms`` onto
+    ``n_servers`` across ``regions``, report placement throughput, then
+    survive an eviction storm with every hinted notice window honored."""
     import random
     from repro.sched import Scheduler
-    from repro.sim.cluster import VM
+    from repro.sim.cluster import VM, Region
     from repro.sim.workload import sample_population
 
-    N_SERVERS, CORES, N_VMS, N_WORKLOADS = 2048, 64, 10_500, 256
     s = Scheduler(publish_decisions=True)
-    for i in range(N_SERVERS):
-        region = "region-0" if i % 2 == 0 else "region-green"
-        s.cluster.add_server(f"s{i}", CORES, region=region)
-    pop = sample_population(N_WORKLOADS, seed=11)
+    for j, r in enumerate(regions):
+        if r not in s.cluster.regions:
+            s.cluster.add_region(Region(r, price=0.85 + 0.05 * j,
+                                        carbon_g_kwh=300.0 + 60.0 * j))
+    # region-0 is the conservative default for every region-fixed workload
+    # (~57% of Table-1 cores), so it gets half the fleet; the remaining
+    # regions split the other half and absorb the region-agnostic VMs
+    for i in range(n_servers):
+        region = (regions[0] if i % 2 == 0
+                  else regions[1 + (i // 2) % (len(regions) - 1)])
+        s.cluster.add_server(f"s{i}", cores, region=region)
+    pop = sample_population(n_workloads, seed=seed)
     for w in pop:
         s.gm.register_workload(w.name, w.hints())
-    rng = random.Random(11)
-    for i in range(N_VMS):
-        w = pop[i % N_WORKLOADS]
-        cores = rng.choice((2.0, 4.0, 8.0, 8.0, 16.0))
-        s.submit(VM(f"vm{i}", w.name, "", cores,
+    rng = random.Random(seed)
+    for i in range(n_vms):
+        w = pop[i % n_workloads]
+        vm_cores = rng.choice((2.0, 4.0, 8.0, 8.0, 16.0))
+        s.submit(VM(f"vm{i}", w.name, "", vm_cores,
                     util_p95=rng.uniform(0.1, 0.9),
                     spot=w.preemptibility >= 20.0))
-    t0 = time.perf_counter()
-    s.schedule_pending()
-    dt = time.perf_counter() - t0
+    _freeze_heap()
+    try:
+        t0 = time.perf_counter()
+        s.schedule_pending()
+        dt = time.perf_counter() - t0
+    finally:
+        gc.unfreeze()   # a raise must not pin this sim heap for the next
+                        # benchmark in the same process
     placed = s.stats["placed"]
     rate = placed / dt if dt else float("inf")
-    # eviction storm on top of the packed cluster
-    for wave in range(4):
-        region = "region-0" if wave % 2 == 0 else "region-green"
+    # eviction storm on top of the packed cluster, alternating regions
+    for wave in range(storm_waves):
+        region = regions[wave % len(regions)]
         s.engine.at(30.0 + wave * 60.0,
-                    lambda r=region: s.capacity_crunch(r, 1500.0))
-    s.run_until(30.0 + 4 * 60.0 + 600.0)
+                    lambda r=region: s.capacity_crunch(r, storm_cores))
+    s.run_until(30.0 + storm_waves * 60.0 + 600.0)
     violations = len(s.evictor.violations())
-    assert placed >= 10_000, f"only placed {placed}"
+    assert placed >= int(0.95 * n_vms), f"only placed {placed}/{n_vms}"
     assert violations == 0, f"{violations} notice violations"
-    return dt * 1e6, (f"placed={placed}/{N_VMS},servers={N_SERVERS},"
+    kills = s.evictor.stats["kills"]
+    JSON_METRICS[name] = {
+        "servers": n_servers, "vms": n_vms, "regions": len(regions),
+        "placed": placed, "placement_seconds": round(dt, 4),
+        "placements_per_s": round(rate),
+        "storm_evictions": kills, "storm_violations": violations,
+        "min_lead_time_s": (None if s.evictor.min_lead_time_s() == float("inf")
+                            else s.evictor.min_lead_time_s()),
+    }
+    return dt * 1e6, (f"placed={placed}/{n_vms},servers={n_servers},"
                       f"placements_per_s={rate:.0f},"
-                      f"storm_evictions={s.evictor.stats['kills']},"
+                      f"storm_evictions={kills},"
                       f"storm_violations={violations}")
+
+
+def sched_scale():
+    """Platform-scheduler scale: pack >=10k VMs onto >=2k servers (two
+    regions), then an eviction storm with every notice window honored."""
+    n_servers = int(os.environ.get("SCHED_SCALE_SERVERS", 2048))
+    n_vms = int(os.environ.get("SCHED_SCALE_VMS", 10_500))
+    return _sched_scale_run("sched_scale", n_servers, 64, n_vms, 256,
+                            ("region-0", "region-green"),
+                            storm_waves=4, storm_cores=1500.0)
+
+
+def sched_scale_xl():
+    """Provider-scale stress: 100k VMs / 16k servers across four regions
+    with an eviction storm mid-run — the paper's "millions of VMs" pitch
+    scaled to what one benchmark process can hold (§6)."""
+    n_servers = int(os.environ.get("SCHED_SCALE_XL_SERVERS", 16_384))
+    n_vms = int(os.environ.get("SCHED_SCALE_XL_VMS", 100_000))
+    return _sched_scale_run("sched_scale_xl", n_servers, 64, n_vms, 512,
+                            ("region-0", "region-green", "region-2",
+                             "region-3"),
+                            storm_waves=6, storm_cores=4000.0)
 
 
 def wi_hint_throughput():
@@ -226,18 +295,28 @@ def sched_scenarios():
 
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
        s62_microservices, s63_videoconf, f5_savings, sched_scale,
-       sched_scenarios, wi_hint_throughput, kernel_flash, roofline_table]
+       sched_scale_xl, sched_scenarios, wi_hint_throughput, kernel_flash,
+       roofline_table]
+
+# sched_scale_xl is opt-in on full runs (it needs ~100k simulated VMs);
+# request it explicitly via --only
+DEFAULT_SKIP = {"sched_scale_xl"}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write scheduler-scale metrics (BENCH_sched.json)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else None
     print("name,us_per_call,derived")
     failed = []
     for fn in ALL:
-        if names and fn.__name__ not in names:
+        if names is not None:
+            if fn.__name__ not in names:
+                continue
+        elif fn.__name__ in DEFAULT_SKIP:
             continue
         try:
             us, derived = fn()
@@ -245,6 +324,11 @@ def main() -> None:
         except Exception as e:   # noqa: BLE001 — report and continue
             failed.append(fn.__name__)
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}", flush=True)
+    if args.json is not None:
+        with open(args.json, "w") as fh:
+            json.dump(JSON_METRICS, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -77,17 +77,24 @@ class EvictionPipeline:
     # -- intake -------------------------------------------------------------
     def submit(self, actions: List, source: str = "sched"
                ) -> List[EvictionTicket]:
-        """Schedule every evict action; other action kinds pass through."""
+        """Schedule every evict action; other action kinds pass through.
+        Notice records for the whole wave go out as one bus batch (an
+        eviction storm submits hundreds of actions at once)."""
         out = []
+        notices: List[tuple] = []
         for a in actions:
             if getattr(a, "kind", None) != "evict":
                 continue
-            t = self._schedule(a, source)
+            t = self._schedule(a, source, notices)
             if t is not None:
                 out.append(t)
+        if notices:
+            self.gm.bus.publish_batch(H.TOPIC_EVICTIONS, notices)
         return out
 
-    def _schedule(self, action, source: str) -> Optional[EvictionTicket]:
+    def _schedule(self, action, source: str,
+                  notice_sink: Optional[List] = None
+                  ) -> Optional[EvictionTicket]:
         vm = self.cluster.vms.get(action.vm)
         if vm is None or not vm.alive:
             self.stats["skipped_gone"] += 1
@@ -110,10 +117,14 @@ class EvictionPipeline:
             resource=resource, deadline_s=notice,
             payload={"cores": vm.cores, "source": source},
             source_opt="evictor"))
-        self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+        notice_rec = {
             "event": "notice", "vm": vm.vm_id, "workload": vm.workload,
             "resource": resource, "notice_s": notice, "t": now,
-            "kill_t": ticket.kill_t, "source": source}, key=vm.vm_id)
+            "kill_t": ticket.kill_t, "source": source}
+        if notice_sink is not None:
+            notice_sink.append((vm.vm_id, notice_rec))
+        else:
+            self.gm.bus.publish(H.TOPIC_EVICTIONS, notice_rec, key=vm.vm_id)
         # deadline ladder: reminder at half window, kill at the deadline
         if notice > 0:
             self.engine.at(now + notice / 2.0,

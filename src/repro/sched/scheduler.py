@@ -14,7 +14,10 @@ Wires the pieces together and runs the main loop:
   * maintenance-aware power events routed from ``MADatacenterManager``;
   * region failover: displaced VMs are re-queued and re-placed on
     surviving regions;
-  * per-decision telemetry on ``wi.sched.decisions`` plus aggregate stats.
+  * decision telemetry on ``wi.sched.decisions`` (batched records: one
+    publish per scheduler entry point and kind, carrying the Decision
+    tuples themselves, rows ordered per ``Decision._fields``) plus
+    aggregate stats.
 """
 from __future__ import annotations
 
@@ -42,6 +45,7 @@ class Scheduler:
                  oversub_ratio: float = 1.25,
                  default_notice_s: float = 30.0,
                  max_migrations_per_tick: int = 64,
+                 max_defrag_migrations: int = 256,
                  decision_log_cap: int = 10_000,
                  publish_decisions: bool = True):
         self.engine = engine or Engine()
@@ -57,10 +61,15 @@ class Scheduler:
         self.spot = SpotManager(self.gm, eviction_notice_s=default_notice_s)
         self.madc = MADatacenterManager(self.gm)
         self.max_migrations_per_tick = max_migrations_per_tick
+        self.max_defrag_migrations = max_defrag_migrations
         self.publish_decisions = publish_decisions
         self.decisions: Deque[Decision] = deque(maxlen=decision_log_cap)
         self.stats: Dict[str, int] = defaultdict(int)
         self._dirty: set = set()
+        # decision telemetry is buffered per scheduler entry point and
+        # flushed as one batched record per kind (see
+        # _publish_decision_batch) instead of one publish per decision
+        self._record_buf: List[tuple] = []
         self.gm.bus.subscribe(H.TOPIC_DEPLOY_HINTS, self._on_hint_change)
         self.gm.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_hint_change)
         # direct-store hint path (set_hints with runtime scope never hits
@@ -115,6 +124,7 @@ class Scheduler:
                 self._record(d, kind="migrate")
                 budget -= 1
         self.stats["hint_migrations"] += len(moved)
+        self._flush_records()
         return moved
 
     # -- the main loop ------------------------------------------------------
@@ -122,26 +132,31 @@ class Scheduler:
                          ) -> List[Decision]:
         """Drain the pending queue first-fit-decreasing.  Unplaceable VMs
         return to the queue (they retry next tick / after a crunch)."""
-        batch: List[VM] = []
-        while self.cluster.pending and (max_batch is None
-                                        or len(batch) < max_batch):
-            vm = self.cluster.pending.popleft()
-            if not vm.alive:        # killed while queued (e.g. eviction)
-                self.stats["dropped_dead"] += 1
-                continue
-            batch.append(vm)
+        if max_batch is None:           # full drain: one pass, no poplefts
+            batch = [vm for vm in self.cluster.pending if vm.alive]
+            dropped = len(self.cluster.pending) - len(batch)
+            if dropped:
+                self.stats["dropped_dead"] += dropped
+            self.cluster.pending.clear()
+        else:
+            batch = []
+            while self.cluster.pending and len(batch) < max_batch:
+                vm = self.cluster.pending.popleft()
+                if not vm.alive:    # killed while queued (e.g. eviction)
+                    self.stats["dropped_dead"] += 1
+                    continue
+                batch.append(vm)
         batch.sort(key=lambda v: v.cores, reverse=True)
-        out: List[Decision] = []
         now = self.engine.clock.t
-        for vm in batch:
-            d = self.placer.place(vm, now)
-            if d.placed:
-                self.stats["placed"] += 1
-            else:
-                self.cluster.pending.append(vm)
-                self.stats["unplaced"] += 1
-            self._record(d, kind="place")
-            out.append(d)
+        unplaced: List[VM] = []
+        out = self.placer.place_batch(batch, now, unplaced_out=unplaced)
+        self.cluster.pending.extend(unplaced)   # they retry next tick
+        self.decisions.extend(out)
+        if self.publish_decisions and out:
+            # zero-copy telemetry: the Decision tuples ARE the payload
+            self._publish_decision_batch("place", out)
+        self.stats["placed"] += len(out) - len(unplaced)
+        self.stats["unplaced"] += len(unplaced)
         return out
 
     def tick(self):
@@ -157,28 +172,36 @@ class Scheduler:
 
     # -- capacity crunch ----------------------------------------------------
     def defragment(self, region: str, cores_needed: float) -> float:
-        """Migrate region-agnostic VMs out of a crunched region.  Returns
-        the nominal cores freed."""
+        """Migrate region-agnostic VMs out of a crunched region (walked via
+        the cluster's per-server vm index, O(region VMs) not O(all VMs)).
+        Bounded by ``max_defrag_migrations`` per call — live migration
+        bandwidth is finite, so a crunch can never stall the platform by
+        migrating half a region; the remaining shortfall is covered by
+        spot reclaim.  Returns the nominal cores freed."""
         freed = 0.0
         moved = 0
-        for vm in list(self.cluster.vms.values()):
-            if freed >= cores_needed:
+        budget = self.max_defrag_migrations
+        for sid in list(self.cluster.servers_in_region(region)):
+            if freed >= cores_needed or moved >= budget:
                 break
-            if not vm.alive or not vm.server:
-                continue
-            if self.cluster.servers[vm.server].region != region:
-                continue
-            eff = self.placer.effective(vm.workload)
-            if not applicable("region_agnostic", eff):
-                continue
-            here = vm.server
-            d = self.placer.migrate(vm, self.engine.clock.t,
-                                    exclude_region=region)
-            if d.placed and d.server != here:
-                freed += vm.cores
-                moved += 1
-                self._record(d, kind="defrag")
+            for vid in list(self.cluster.vm_ids_on(sid)):
+                if freed >= cores_needed or moved >= budget:
+                    break
+                vm = self.cluster.vms.get(vid)
+                if vm is None or not vm.alive or not vm.server:
+                    continue
+                eff = self.placer.effective(vm.workload)
+                if not applicable("region_agnostic", eff):
+                    continue
+                here = vm.server
+                d = self.placer.migrate(vm, self.engine.clock.t,
+                                        exclude_region=region)
+                if d.placed and d.server != here:
+                    freed += vm.cores
+                    moved += 1
+                    self._record(d, kind="defrag")
         self.stats["defrag_migrations"] += moved
+        self._flush_records()
         return freed
 
     def capacity_crunch(self, region: str, cores_needed: float) -> Dict:
@@ -190,11 +213,16 @@ class Scheduler:
         if freed < cores_needed:
             view = self.cluster.view()
             # restrict reclaim to spot VMs inside the crunched region that
-            # are not already mid-eviction (their cores are spoken for)
-            in_region = {vid: info for vid, info in view["vms"].items()
-                         if vid not in self.evictor.tickets
-                         and view["servers"].get(info["server"],
-                                                 {}).get("region") == region}
+            # are not already mid-eviction (their cores are spoken for) —
+            # walked via the cluster's per-server vm index, O(region VMs)
+            # instead of O(all VMs)
+            vms_view = view["vms"]
+            mid_eviction = self.evictor.tickets
+            in_region = {}
+            for sid in self.cluster.servers_in_region(region):
+                for vid in self.cluster.vm_ids_on(sid):
+                    if vid not in mid_eviction and vid in vms_view:
+                        in_region[vid] = vms_view[vid]
             acts = self.spot.reclaim({**view, "vms": in_region},
                                      cores_needed - freed)
             tickets = self.evictor.submit(acts, source="spot")
@@ -208,11 +236,15 @@ class Scheduler:
         """MA-datacenter power event: throttle low-availability VMs, evict
         preemptible ones (through the notice pipeline)."""
         view = self.cluster.view()
-        # VMs already mid-eviction must not be re-selected (their cores
-        # would double-count toward the shed target and then be dropped)
-        view = {**view, "vms": {vid: info
-                                for vid, info in view["vms"].items()
-                                if vid not in self.evictor.tickets}}
+        # only this server's VMs matter, and VMs already mid-eviction must
+        # not be re-selected (their cores would double-count toward the
+        # shed target and then be dropped) — restrict via the vm index
+        vms_view = view["vms"]
+        mid_eviction = self.evictor.tickets
+        on_server = {vid: vms_view[vid]
+                     for vid in self.cluster.vm_ids_on(server)
+                     if vid not in mid_eviction and vid in vms_view}
+        view = {**view, "vms": on_server}
         acts = self.madc.power_event(view, server, shed_frac)
         tickets = self.evictor.submit(acts, source="ma_datacenters")
         throttles = [a for a in acts if a.kind == "throttle"]
@@ -235,13 +267,31 @@ class Scheduler:
     def _record(self, d: Decision, kind: str):
         self.decisions.append(d)
         if self.publish_decisions:
-            self.gm.bus.publish(H.TOPIC_SCHED_DECISIONS, {
-                "kind": kind, "vm": d.vm_id, "workload": d.workload,
-                "server": d.server, "region": d.region,
-                "oversubscribed": d.oversubscribed, "reason": d.reason,
-                "t": d.t}, key=d.workload)
+            self._record_buf.append((kind, d))
+
+    def _publish_decision_batch(self, kind: str, ds: List[Decision]):
+        """One batched record per (entry point, kind): {"kind", "n", "t",
+        "fields", "decisions": [Decision tuples]} with rows ordered per
+        ``Decision._fields`` — per-decision publishes (and per-decision
+        dicts) cost more than the placements they report at 100k-VM
+        scale.  Decisions are NamedTuples, so rows JSON-serialize as
+        plain arrays on durable buses."""
+        self.gm.bus.publish(H.TOPIC_SCHED_DECISIONS, {
+            "kind": kind, "n": len(ds), "t": self.engine.clock.t,
+            "fields": Decision._fields, "decisions": ds})
+
+    def _flush_records(self):
+        if not self._record_buf:
+            return
+        buf, self._record_buf = self._record_buf, []
+        by_kind: Dict[str, List[Decision]] = {}
+        for kind, d in buf:
+            by_kind.setdefault(kind, []).append(d)
+        for kind, ds in by_kind.items():
+            self._publish_decision_batch(kind, ds)
 
     def telemetry(self) -> Dict:
+        self._flush_records()        # decisions buffered mid-entry-point
         alive = [v for v in self.cluster.vms.values() if v.alive and v.server]
         return {
             "sched": dict(self.stats),

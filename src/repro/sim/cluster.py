@@ -6,12 +6,35 @@ The cluster also owns the pending-VM queue (submitted but not yet placed),
 p95-aware headroom accounting for oversubscribed packing, and region
 failover (mark a region's servers down and hand back the displaced VMs so
 the scheduler can re-place them).
+
+Accounting is *incremental*: per-server ``used`` / ``p95_used`` running
+counters plus a vm-id index are maintained in O(1) on every mutation
+(place, unplace, kill, harvest grow/shrink, resize), so ``free_cores`` /
+``p95_used`` / ``headroom`` are O(1) lookups instead of O(V) scans, and
+``view()`` is a cached snapshot patched from dirty-server / dirty-VM deltas
+instead of an O(V+S) rebuild per call.  Mutations made directly on ``VM`` /
+``Server`` dataclass fields (legacy callers, tests) are intercepted by
+``__setattr__`` once the object is registered with a cluster, so the
+counters never go stale; ``recompute()`` provides the from-scratch
+cross-check that tests pin the incremental books against.
+
+``view()`` returns a live snapshot owned by the cluster: callers must treat
+it as read-only and must not hold it across cluster mutations (every caller
+in-tree re-requests it per tick).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Set
+
+# VM fields that feed the per-server counters (and the cached view).
+_VM_COUNTED = frozenset(("server", "cores", "util_p95", "harvested",
+                         "oversubscribed", "alive"))
+# VM fields that only feed the cached view entry.
+_VM_VIEWED = frozenset(("workload", "spot", "harvest"))
+# Server fields that feed the cached view entry.
+_SRV_VIEWED = frozenset(("cores", "power_capped", "up"))
 
 
 @dataclass
@@ -27,6 +50,17 @@ class VM:
     oversubscribed: bool = False
     alive: bool = True
 
+    def __setattr__(self, name, value):
+        cl = self.__dict__.get("_cluster")
+        if cl is None:
+            object.__setattr__(self, name, value)
+        elif name in _VM_COUNTED:
+            cl._vm_counted_change(self, name, value)
+        else:
+            object.__setattr__(self, name, value)
+            if name in _VM_VIEWED:
+                cl._dirty_vms.add(self.vm_id)
+
 
 @dataclass
 class Server:
@@ -36,6 +70,12 @@ class Server:
     power_capped: bool = False
     up: bool = True
 
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        cl = self.__dict__.get("_cluster")
+        if cl is not None and name in _SRV_VIEWED:
+            cl._dirty_servers.add(self.server_id)
+
 
 @dataclass
 class Region:
@@ -43,32 +83,161 @@ class Region:
     price: float = 1.0
     carbon_g_kwh: float = 546.0      # §6.4 baseline grid intensity
 
+    def __setattr__(self, name, value):
+        object.__setattr__(self, name, value)
+        cl = self.__dict__.get("_cluster")
+        if cl is not None:
+            cl.regions_version += 1
+
 
 class Cluster:
     def __init__(self):
         self.servers: Dict[str, Server] = {}
         self.vms: Dict[str, VM] = {}
         self.pending: Deque[VM] = deque()
-        self.regions: Dict[str, Region] = {
-            "region-0": Region("region-0", 1.0, 546.0),
-            "region-green": Region("region-green", 0.78, 267.0),
-        }
+        self.regions: Dict[str, Region] = {}
+        self.regions_version = 0        # bumped on any region add/change
         self._by_region: Dict[str, List[str]] = {}
+        # -- incremental accounting (the tentpole) --------------------------
+        self._used: Dict[str, float] = {}       # nominal + harvested cores
+        self._p95: Dict[str, float] = {}        # p95-aware demand
+        self._on_server: Dict[str, Set[str]] = {}   # alive placed vm-ids
+        # -- cached view ----------------------------------------------------
+        self._view: Optional[Dict] = None
+        self._dirty_vms: Set[str] = set()
+        self._dirty_servers: Set[str] = set()
+        self._view_regions_version = -1
+        self.add_region(Region("region-0", 1.0, 546.0))
+        self.add_region(Region("region-green", 0.78, 267.0))
+
+    # -- topology -----------------------------------------------------------
+    def add_region(self, region: Region):
+        self.regions[region.name] = region
+        region.__dict__["_cluster"] = self
+        self.regions_version += 1
 
     def add_server(self, server_id: str, cores: float, region="region-0"):
-        self.servers[server_id] = Server(server_id, cores, region)
+        srv = Server(server_id, cores, region)
+        srv.__dict__["_cluster"] = self
+        self.servers[server_id] = srv
         self._by_region.setdefault(region, []).append(server_id)
+        self._used[server_id] = 0.0
+        self._p95[server_id] = 0.0
+        self._on_server[server_id] = set()
+        self._dirty_servers.add(server_id)
 
+    # -- accounting internals ------------------------------------------------
+    def _account(self, vm: VM, sign: float):
+        """Add (sign=+1) or remove (sign=-1) an alive placed VM's demand."""
+        sid = vm.server
+        nominal = vm.cores + vm.harvested
+        self._used[sid] = self._used.get(sid, 0.0) + sign * nominal
+        p95 = vm.cores * vm.util_p95 if vm.oversubscribed else nominal
+        self._p95[sid] = self._p95.get(sid, 0.0) + sign * p95
+        on = self._on_server.get(sid)
+        if on is None:
+            on = self._on_server[sid] = set()
+        if sign > 0:
+            on.add(vm.vm_id)
+        else:
+            on.discard(vm.vm_id)
+        self._dirty_servers.add(sid)
+
+    def _vm_counted_change(self, vm: VM, name, value):
+        """A registered VM's counted field changes: move its contribution."""
+        if vm.alive and vm.server:
+            self._account(vm, -1.0)
+        object.__setattr__(vm, name, value)
+        if vm.alive and vm.server:
+            self._account(vm, +1.0)
+        self._dirty_vms.add(vm.vm_id)
+
+    def recompute(self) -> Dict[str, Dict[str, float]]:
+        """From-scratch accounting (the cross-check the incremental books
+        are tested against): {"used": {sid: cores}, "p95_used": {sid: ...}}."""
+        used: Dict[str, float] = {sid: 0.0 for sid in self.servers}
+        p95: Dict[str, float] = {sid: 0.0 for sid in self.servers}
+        for v in self.vms.values():
+            if not v.alive or not v.server:
+                continue
+            nominal = v.cores + v.harvested
+            used[v.server] = used.get(v.server, 0.0) + nominal
+            p95[v.server] = p95.get(v.server, 0.0) + (
+                v.cores * v.util_p95 if v.oversubscribed else nominal)
+        return {"used": used, "p95_used": p95}
+
+    def assert_consistent(self, tol: float = 1e-6):
+        """Raise if the incremental counters drifted from ground truth."""
+        truth = self.recompute()
+        for sid in self.servers:
+            got_u, want_u = self._used.get(sid, 0.0), truth["used"][sid]
+            got_p, want_p = self._p95.get(sid, 0.0), truth["p95_used"][sid]
+            if abs(got_u - want_u) > tol or abs(got_p - want_p) > tol:
+                raise AssertionError(
+                    f"{sid}: incremental used={got_u}/p95={got_p} != "
+                    f"recomputed used={want_u}/p95={want_p}")
+            index = {vid for vid in self._on_server.get(sid, ())
+                     if self.vms.get(vid) is not None}
+            truth_index = {v.vm_id for v in self.vms.values()
+                           if v.alive and v.server == sid}
+            if index != truth_index:
+                raise AssertionError(f"{sid}: vm index {index} != "
+                                     f"{truth_index}")
+
+    # -- VM registry ---------------------------------------------------------
     def add_vm(self, vm: VM):
+        if vm.__dict__.get("_cluster") is self and \
+                self.vms.get(vm.vm_id) is vm:
+            return                  # already registered; books are current
+        old = self.vms.get(vm.vm_id)
+        if old is not None and old is not vm:
+            self.remove_vm(vm.vm_id)
         self.vms[vm.vm_id] = vm
+        vm.__dict__["_cluster"] = self
+        if vm.alive and vm.server:
+            self._account(vm, +1.0)
+        self._dirty_vms.add(vm.vm_id)
+
+    def place_fresh(self, vm: VM, server_id: str, oversubscribed: bool,
+                    p95_demand: float):
+        """Batch-placer hot path: register + account a VM landing on
+        ``server_id`` in one call (equivalent to setting ``vm.server`` /
+        ``vm.oversubscribed`` and calling ``add_vm``, with the interception
+        machinery bypassed).  ``p95_demand`` is the caller's already-known
+        p95 contribution (``cores*util_p95`` if oversubscribed, else
+        ``cores+harvested``)."""
+        d = vm.__dict__
+        if d.get("_cluster") is self and self.vms.get(vm.vm_id) is vm:
+            vm.oversubscribed = oversubscribed  # registered: interception
+            vm.server = server_id               # keeps the books
+            return
+        old = self.vms.get(vm.vm_id)
+        if old is not None and old is not vm:
+            self.remove_vm(vm.vm_id)
+        d["server"] = server_id
+        d["oversubscribed"] = oversubscribed
+        d["_cluster"] = self
+        self.vms[vm.vm_id] = vm
+        if vm.alive:
+            self._used[server_id] += vm.cores + vm.harvested
+            self._p95[server_id] += p95_demand
+            self._on_server[server_id].add(vm.vm_id)
+            self._dirty_servers.add(server_id)
+        self._dirty_vms.add(vm.vm_id)
 
     def remove_vm(self, vm_id: str):
-        self.vms.pop(vm_id, None)
+        vm = self.vms.pop(vm_id, None)
+        if vm is None:
+            return
+        if vm.alive and vm.server:
+            self._account(vm, -1.0)
+        vm.__dict__["_cluster"] = None
+        self._dirty_vms.add(vm_id)
 
     def kill_vm(self, vm_id: str):
         vm = self.vms.get(vm_id)
         if vm is not None:
-            vm.alive = False
+            vm.alive = False        # interception updates the books
 
     # -- pending queue (scheduler feed) -------------------------------------
     def enqueue(self, vm: VM):
@@ -81,30 +250,25 @@ class Cluster:
         vm.server = ""
         self.pending.appendleft(vm)
 
-    # -- accounting ---------------------------------------------------------
+    # -- accounting (O(1) reads) --------------------------------------------
     def free_cores(self, server_id: str) -> float:
-        used = sum(v.cores + v.harvested for v in self.vms.values()
-                   if v.server == server_id and v.alive)
-        return self.servers[server_id].cores - used
+        return self.servers[server_id].cores - self._used.get(server_id, 0.0)
 
     def p95_used(self, server_id: str) -> float:
         """Expected p95 demand: oversubscribed VMs count at p95 utilization,
         everything else reserves its nominal allocation."""
-        used = 0.0
-        for v in self.vms.values():
-            if v.server != server_id or not v.alive:
-                continue
-            used += (v.cores * v.util_p95 if v.oversubscribed
-                     else v.cores + v.harvested)
-        return used
+        return self._p95.get(server_id, 0.0)
 
     def headroom(self, server_id: str) -> float:
         """p95-aware headroom oversubscription-eligible VMs pack against."""
-        return self.servers[server_id].cores - self.p95_used(server_id)
+        return self.servers[server_id].cores - self._p95.get(server_id, 0.0)
+
+    def vm_ids_on(self, server_id: str) -> Set[str]:
+        """Alive placed vm-ids on a server (the incremental index)."""
+        return self._on_server.get(server_id, set())
 
     def vms_on(self, server_id: str) -> List[VM]:
-        return [v for v in self.vms.values()
-                if v.server == server_id and v.alive]
+        return [self.vms[vid] for vid in self._on_server.get(server_id, ())]
 
     # -- regions ------------------------------------------------------------
     def servers_in_region(self, region: str) -> List[str]:
@@ -123,26 +287,57 @@ class Cluster:
             displaced.extend(self.fail_server(sid))
         return displaced
 
+    # -- the cached view -----------------------------------------------------
+    def _vm_entry(self, v: VM) -> Dict:
+        return {"workload": v.workload, "server": v.server,
+                "cores": v.cores, "util_p95": v.util_p95,
+                "spot": v.spot, "harvest": v.harvest,
+                "harvested": v.harvested,
+                "oversubscribed": v.oversubscribed}
+
+    def _server_entry(self, s: Server) -> Dict:
+        return {"cores": s.cores,
+                "free_cores": s.cores - self._used.get(s.server_id, 0.0),
+                "power_cap": s.power_capped,
+                "region": s.region,
+                "up": s.up}
+
     def view(self) -> Dict:
-        used: Dict[str, float] = {}
-        for v in self.vms.values():
-            if v.alive and v.server:
-                used[v.server] = used.get(v.server, 0.0) + v.cores + v.harvested
-        return {
-            "vms": {v.vm_id: {"workload": v.workload, "server": v.server,
-                              "cores": v.cores, "util_p95": v.util_p95,
-                              "spot": v.spot, "harvest": v.harvest,
-                              "harvested": v.harvested,
-                              "oversubscribed": v.oversubscribed}
-                    for v in self.vms.values() if v.alive},
-            "servers": {s.server_id: {"cores": s.cores,
-                                      "free_cores":
-                                          s.cores - used.get(s.server_id, 0.0),
-                                      "power_cap": s.power_capped,
-                                      "region": s.region,
-                                      "up": s.up}
-                        for s in self.servers.values()},
-            "regions": {r.name: {"price": r.price,
-                                 "carbon_g_kwh": r.carbon_g_kwh}
-                        for r in self.regions.values()},
-        }
+        """Cached world snapshot; only dirty VMs/servers are re-rendered.
+        The returned dict is owned by the cluster — treat as read-only and
+        re-request after any mutation."""
+        if self._view is None:
+            self._view = {
+                "vms": {v.vm_id: self._vm_entry(v)
+                        for v in self.vms.values() if v.alive},
+                "servers": {s.server_id: self._server_entry(s)
+                            for s in self.servers.values()},
+                "regions": {},
+            }
+            self._dirty_vms.clear()
+            self._dirty_servers.clear()
+        else:
+            if self._dirty_vms:
+                vms_view = self._view["vms"]
+                for vid in self._dirty_vms:
+                    v = self.vms.get(vid)
+                    if v is None or not v.alive:
+                        vms_view.pop(vid, None)
+                    else:
+                        vms_view[vid] = self._vm_entry(v)
+                self._dirty_vms.clear()
+            if self._dirty_servers:
+                srv_view = self._view["servers"]
+                for sid in self._dirty_servers:
+                    s = self.servers.get(sid)
+                    if s is None:
+                        srv_view.pop(sid, None)
+                    else:
+                        srv_view[sid] = self._server_entry(s)
+                self._dirty_servers.clear()
+        if self._view_regions_version != self.regions_version:
+            self._view["regions"] = {
+                r.name: {"price": r.price, "carbon_g_kwh": r.carbon_g_kwh}
+                for r in self.regions.values()}
+            self._view_regions_version = self.regions_version
+        return self._view

@@ -101,12 +101,11 @@ def fit_rho(target: float = PAPER_TOTAL_SAVING,
     for _ in range(60):
         mid = 0.5 * (lo + hi)
         saving = 1.0 - waterfall(fracs, rho=mid)[0]
+        # saving decreases in rho: overshoot -> rho too small -> raise lo
         if saving > target:
-            lo, hi = mid, hi
             lo = mid
         else:
             hi = mid
-        lo, hi = (mid, hi) if saving > target else (lo, mid)
     return 0.5 * (lo + hi)
 
 

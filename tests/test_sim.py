@@ -13,7 +13,8 @@ from repro.core.optimizations import (HarvestManager, MADatacenterManager,
 from repro.sim.cluster import VM, Cluster
 from repro.sim.engine import Engine
 from repro.sim.provider_scale import (FIGURE5_CONTRIB, PAPER_CARBON_SAVING,
-                                      PAPER_TOTAL_SAVING, evaluate)
+                                      PAPER_TOTAL_SAVING, TABLE3_CORE_FRAC,
+                                      evaluate, fit_rho, waterfall)
 from repro.sim.workload import (TABLE1_TARGETS, core_weighted_marginals,
                                 sample_population)
 
@@ -53,6 +54,29 @@ def test_provider_scale_reproduces_paper():
     # waterfall identity: contributions sum to the total saving
     assert sum(r.contrib_independence.values()) == pytest.approx(
         r.saving_independence, rel=1e-9)
+
+
+def test_fit_rho_bisection_converges_to_reference():
+    """Regression for the duplicated bisection-update lines: ``fit_rho``
+    must converge to the same rho as a clean reference bisection, and the
+    fitted rho must reproduce the paper total by construction."""
+    def reference_fit(target):
+        lo, hi = -0.5, 0.9
+        for _ in range(60):
+            mid = 0.5 * (lo + hi)
+            if 1.0 - waterfall(TABLE3_CORE_FRAC, rho=mid)[0] > target:
+                lo = mid
+            else:
+                hi = mid
+        return 0.5 * (lo + hi)
+
+    rho = fit_rho()
+    assert rho == pytest.approx(reference_fit(PAPER_TOTAL_SAVING), abs=1e-12)
+    assert 1.0 - waterfall(TABLE3_CORE_FRAC, rho=rho)[0] == pytest.approx(
+        PAPER_TOTAL_SAVING, abs=1e-9)
+    # monotonicity sanity: saving strictly decreases in rho around the fit
+    assert (1.0 - waterfall(TABLE3_CORE_FRAC, rho=rho - 0.05)[0]
+            > 1.0 - waterfall(TABLE3_CORE_FRAC, rho=rho + 0.05)[0])
 
 
 def test_bigdata_case_study_figure4():
