@@ -201,6 +201,8 @@ def _sched_scale_run(name, n_servers, cores, n_vms, n_workloads, regions,
         "placed": placed, "placement_seconds": round(dt, 4),
         "placements_per_s": round(rate),
         "storm_evictions": kills, "storm_violations": violations,
+        "storm_already_gone": s.evictor.stats.get("already_gone", 0),
+        "storm_cancellations": s.evictor.stats.get("cancellations", 0),
         "min_lead_time_s": (None if s.evictor.min_lead_time_s() == float("inf")
                             else s.evictor.min_lead_time_s()),
     }
@@ -279,6 +281,43 @@ def roofline_table():
                 f"@{worst.roofline_fraction:.1%}")
 
 
+def agents_diurnal():
+    """Bidirectional-loop scenario: workload agents under an eviction storm
+    with diurnal hint adaptation (sizes honor AGENTS_DIURNAL_SERVERS /
+    AGENTS_DIURNAL_VM_SCALE for the CI smoke job)."""
+    from repro.sim.casestudies.diurnal_agents import run
+    n_servers = int(os.environ.get("AGENTS_DIURNAL_SERVERS", 30))
+    vm_scale = float(os.environ.get("AGENTS_DIURNAL_VM_SCALE", 1.0))
+    us, r = _timed(lambda: run(seed=0, n_servers_per_region=n_servers,
+                               vm_scale=vm_scale))
+    assert r["violations"] == 0, f"{r['violations']} notice violations"
+    assert r["early_releases"] > 0, "no eviction resolved by early release"
+    assert r["lost_work_s_stateless"] == 0.0, "stateless workloads lost work"
+    # the falsifiable form of the stateless bar: every noticed stateless VM
+    # consented (acked) before the platform took it
+    assert r["stateless_killed_without_ack"] == 0, \
+        f"{r['stateless_killed_without_ack']} stateless VMs killed unacked"
+    JSON_METRICS["agents_diurnal"] = {
+        "servers_per_region": n_servers,
+        "evictions_killed": r["evictions_killed"],
+        "early_releases": r["early_releases"],
+        "early_release_frac": round(r["early_release_frac"], 4),
+        "violations": r["violations"],
+        "lost_work_s": round(r["lost_work_s"], 2),
+        "lost_work_s_stateless": r["lost_work_s_stateless"],
+        "stateless_killed_without_ack": r["stateless_killed_without_ack"],
+        "replacements_placed": r["replacements_placed"],
+        "replacement_lead_s_mean": round(r["replacement_lead_s_mean"], 2),
+        "hint_adaptations": r["hint_adaptations"],
+        "hint_migrations": r["hint_migrations"],
+    }
+    return us, (f"early_frac={r['early_release_frac']:.2f},"
+                f"killed={r['evictions_killed']},"
+                f"lost_work_stateless={r['lost_work_s_stateless']:.0f}s,"
+                f"repl_lead={r['replacement_lead_s_mean']:.0f}s,"
+                f"violations={r['violations']}")
+
+
 def sched_scenarios():
     """Eviction-storm + capacity-crunch scenarios (sched/ subsystem)."""
     from repro.sim.casestudies.capacity_crunch import run as run_crunch
@@ -295,8 +334,8 @@ def sched_scenarios():
 
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
        s62_microservices, s63_videoconf, f5_savings, sched_scale,
-       sched_scale_xl, sched_scenarios, wi_hint_throughput, kernel_flash,
-       roofline_table]
+       sched_scale_xl, sched_scenarios, agents_diurnal, wi_hint_throughput,
+       kernel_flash, roofline_table]
 
 # sched_scale_xl is opt-in on full runs (it needs ~100k simulated VMs);
 # request it explicitly via --only

@@ -1,0 +1,17 @@
+"""Workload-side WI agent runtime (paper §4, the guest half).
+
+PRs 1–2 built the platform half (hint-aware placement, admission, the
+eviction-notice ladder); this package closes the bidirectional loop: per-VM
+``WorkloadAgent``s attach through ``LocalManager.attach_vm``, react to
+platform events (checkpoint-then-drain, replace-and-ack-early, shed load),
+and drive dynamic hint adaptation over diurnal phases.
+"""
+from repro.agents.agent import WorkloadAgent
+from repro.agents.policy import (PARTIAL, STATEFUL, STATELESS, AgentPolicy,
+                                 DiurnalProfile)
+from repro.agents.runtime import AgentRuntime
+
+__all__ = [
+    "AgentPolicy", "AgentRuntime", "DiurnalProfile", "PARTIAL", "STATEFUL",
+    "STATELESS", "WorkloadAgent",
+]

@@ -1,0 +1,150 @@
+"""The per-VM workload agent: the guest half of the bidirectional loop.
+
+One ``WorkloadAgent`` runs "inside" each VM, attached to the local
+manager's ``VMEndpoint``.  It receives platform events through the
+scheduled-events push channel and reacts the way the paper says workloads
+do (§4):
+
+  * ``EVICTION_NOTICE`` — stateless scale-out workloads request a
+    replacement VM from the platform and *ack immediately*: the eviction
+    pipeline releases the VM (freeing its capacity) long before the kill
+    deadline.  Stateful/partial workloads first checkpoint — simulated
+    latency proportional to state size — and ack once the checkpoint is
+    durable; work since the last checkpoint is metered as lost-work-seconds
+    if the deadline beats the checkpoint.
+  * ``THROTTLE_NOTICE`` / ``UNDERCLOCK_NOTICE`` / ``SCALE_DOWN_NOTICE`` —
+    shed load (the VM's p95 demand drops; the cluster books follow) and
+    advertise a lower keep-priority runtime hint so future reclaims pick
+    this VM first.
+  * diurnal phase changes — the workload's leader agent re-asserts
+    workload-wide runtime hints (``set_runtime_hints(workload_wide=True)``)
+    so placement, eviction choice, and notice windows track the phase.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.core import hints as H
+
+from repro.agents.policy import STATELESS, AgentPolicy
+
+_EVICTION = H.PlatformEvent.EVICTION_NOTICE.value
+_SHED_EVENTS = (H.PlatformEvent.THROTTLE_NOTICE.value,
+                H.PlatformEvent.UNDERCLOCK_NOTICE.value,
+                H.PlatformEvent.SCALE_DOWN_NOTICE.value)
+
+
+class WorkloadAgent:
+    def __init__(self, vm, endpoint, runtime, policy: AgentPolicy):
+        self.vm = vm
+        self.ep = endpoint
+        self.rt = runtime
+        self.policy = policy
+        self.server_id = vm.server
+        now = runtime.now()
+        self.attached_t = now
+        self.last_ckpt_t = now          # work before attach is not ours
+        self.draining = False
+        self.ckpt_running = False
+        self.acked_eviction = False     # consented to at least one release
+        self.dead = False
+        # generation guard: cancel/rebind invalidate in-flight checkpoint
+        # timers, so a stale timer can never ack a *later* ticket
+        self._ckpt_gen = 0
+        endpoint.on_event(self._on_event)
+
+    # -- endpoint rebinding (migration moved the VM to another server) ------
+    def rebind(self, endpoint):
+        self.ep = endpoint
+        self.server_id = self.vm.server
+        self.draining = False           # a pending eviction cancels on move
+        self.ckpt_running = False
+        self._ckpt_gen += 1
+        endpoint.on_event(self._on_event)
+
+    def on_eviction_cancelled(self):
+        """The platform recovered capacity: re-arm for the next notice and
+        invalidate any in-flight checkpoint timer."""
+        self.draining = False
+        self.ckpt_running = False
+        self._ckpt_gen += 1
+
+    # -- event dispatch ------------------------------------------------------
+    def _on_event(self, event: Dict[str, Any]):
+        if self.dead:
+            return
+        kind = event.get("event")
+        if kind == _EVICTION:
+            self._on_eviction(event)
+        elif kind in _SHED_EVENTS:
+            self._on_shed(event)
+
+    def _on_eviction(self, event: Dict[str, Any]):
+        if self.draining:
+            return                      # reminder / duplicate: already on it
+        self.draining = True
+        self.rt.metrics["eviction_notices_seen"] += 1
+        pol = self.policy
+        if pol.scale_out_in:
+            # scale-out: a replacement starts deploying immediately, racing
+            # the notice window
+            self.rt.request_replacement(self, event)
+        if pol.statefulness == STATELESS:
+            # nothing to lose: hand the VM back right away
+            self._ack(event)
+            return
+        # stateful/partial: checkpoint first, ack only once durable
+        self.ckpt_running = True
+        self._ckpt_gen += 1
+        self.rt.metrics["checkpoints_started"] += 1
+        self.rt.engine.after(pol.checkpoint_s(),
+                             lambda e=event, g=self._ckpt_gen:
+                             self._ckpt_done(e, g))
+
+    def _ckpt_done(self, event: Dict[str, Any], gen: int):
+        if self.dead or gen != self._ckpt_gen:
+            return      # deadline won, or the ticket this checkpoint served
+            # was cancelled/moved — a stale timer must not ack a later one
+        self.ckpt_running = False
+        self.last_ckpt_t = self.rt.now()
+        self.rt.metrics["checkpoints_completed"] += 1
+        self._ack(event)                # drained: release early
+
+    def _ack(self, event: Dict[str, Any]):
+        seq = event.get("seq")
+        if seq is not None:
+            self.acked_eviction = True
+            self.ep.ack_event(seq)
+            self.rt.metrics["acks_sent"] += 1
+
+    def _on_shed(self, event: Dict[str, Any]):
+        # the platform's requested fraction when it names one (throttle:
+        # "frac", underclock: "slowdown_frac"), else the policy's default
+        payload = event.get("payload", {})
+        frac = payload.get("frac", payload.get(
+            "slowdown_frac", self.policy.throttle_shed_frac))
+        shed = min(max(float(frac), 0.0), 1.0)
+        # shed load through the runtime so BOTH the cluster's incremental
+        # books and the admission controller's reservation follow the drop
+        self.rt.shed_load(self, max(0.05, self.vm.util_p95 * (1.0 - shed)))
+        # advertise low keep-priority: future reclaims should pick us first
+        self.ep.set_runtime_hints({"x-preemption-priority": 5.0})
+        self.rt.metrics["shed_reactions"] += 1
+
+    # -- diurnal adaptation --------------------------------------------------
+    def on_phase(self, phase: str):
+        prof = self.policy.diurnal
+        if prof is None or not self.rt.is_leader(self):
+            return
+        hints = prof.hints_for(phase)
+        if hints and self.ep.set_runtime_hints(hints, workload_wide=True):
+            self.rt.metrics["hint_adaptations"] += 1
+
+    # -- lifecycle -----------------------------------------------------------
+    def on_killed(self, t: float) -> float:
+        """The platform took the VM; return lost work in seconds (work since
+        the last durable checkpoint — zero for stateless workloads)."""
+        self.dead = True
+        if self.policy.statefulness == STATELESS:
+            return 0.0
+        return max(0.0, t - self.last_ckpt_t)

@@ -1,0 +1,47 @@
+"""Per-workload agent policies: how a workload reacts to platform events.
+
+A policy is the workload-side contract the paper's §4 "dynamically adapt
+behaviors" claim needs: what state the workload carries (and therefore how
+long a checkpoint takes), whether it can scale out (replace an evicted VM
+instead of draining it), how hard it sheds load on a throttle, and how its
+hints swing with the diurnal phase (Parayil et al.'s characterization:
+bigdata turns delay-tolerant/preemptible off-peak, interactive classes
+raise availability at peak).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+STATELESS = "stateless"
+PARTIAL = "partial"
+STATEFUL = "stateful"
+
+
+@dataclass(frozen=True)
+class DiurnalProfile:
+    """Runtime hints asserted per phase (workload-wide, by the workload's
+    leader agent through its guest channel)."""
+    peak_hints: Dict[str, Any] = field(default_factory=dict)
+    offpeak_hints: Dict[str, Any] = field(default_factory=dict)
+
+    def hints_for(self, phase: str) -> Dict[str, Any]:
+        return dict(self.peak_hints if phase == "peak"
+                    else self.offpeak_hints)
+
+
+@dataclass
+class AgentPolicy:
+    """How one workload's per-VM agents behave."""
+    statefulness: str = STATELESS       # stateless | partial | stateful
+    state_gb: float = 0.0               # checkpointable state per VM
+    ckpt_gbps: float = 1.0              # checkpoint write bandwidth
+    scale_out_in: bool = False          # may replace an evicted VM elsewhere
+    throttle_shed_frac: float = 0.5     # p95 load shed on a throttle notice
+    diurnal: Optional[DiurnalProfile] = None
+
+    def checkpoint_s(self) -> float:
+        """Simulated checkpoint latency, proportional to state size."""
+        if self.statefulness == STATELESS or self.state_gb <= 0.0:
+            return 0.0
+        return self.state_gb / max(self.ckpt_gbps, 1e-9)

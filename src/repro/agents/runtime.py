@@ -1,0 +1,223 @@
+"""AgentRuntime: wires per-VM ``WorkloadAgent``s into a running scheduler.
+
+The runtime is the deployment fabric the paper assumes exists inside every
+guest image: it owns one ``LocalManager`` per server (the Hyper-V KVP /
+XenStore host side), attaches an agent to every placed VM through
+``LocalManager.attach_vm``, and keeps the population current entirely from
+bus traffic — placement/migration decisions on ``wi.sched.decisions``
+attach or rebind agents, cluster kill callbacks detach them and meter lost
+work, eviction cancellations re-arm them.  Replacement requests from
+stateless agents are submitted straight back into the scheduler's pending
+queue, and the replacement's *lead time* (how long before the original kill
+deadline the replacement was running) is recorded when it lands.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Optional
+
+from repro.core import hints as H
+from repro.core.local_manager import LocalManager
+from repro.sim.cluster import VM
+
+from repro.agents.agent import WorkloadAgent
+from repro.agents.policy import STATELESS, AgentPolicy
+
+
+class AgentRuntime:
+    def __init__(self, scheduler, policies: Optional[Dict[str, AgentPolicy]]
+                 = None, default_policy: Optional[AgentPolicy] = None,
+                 vm_hint_rate_per_s: float = 10.0,
+                 vm_hint_burst: float = 50.0):
+        self.sched = scheduler
+        self.gm = scheduler.gm
+        self.engine = scheduler.engine
+        self.cluster = scheduler.cluster
+        self.policies: Dict[str, AgentPolicy] = dict(policies or {})
+        self.default_policy = default_policy or AgentPolicy()
+        self._hint_rate = (vm_hint_rate_per_s, vm_hint_burst)
+        self._locals: Dict[str, LocalManager] = {}      # per server
+        self.agents: Dict[str, WorkloadAgent] = {}      # per vm
+        self._leaders: Dict[str, str] = {}              # workload -> vm_id
+        # replacement vm_id -> the original VM's kill deadline
+        self._repl_pending: Dict[str, float] = {}
+        self._repl_seq = 0
+        self.phase = "peak"
+        self.metrics = defaultdict(float)
+        self.cluster.kill_listeners.append(self._on_vm_killed)
+        self.gm.bus.subscribe(H.TOPIC_SCHED_DECISIONS, self._on_decisions)
+        self.gm.bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction_record)
+        self.attach_placed()
+
+    # -- plumbing ------------------------------------------------------------
+    def now(self) -> float:
+        return self.engine.clock.t
+
+    def local(self, server_id: str) -> LocalManager:
+        lm = self._locals.get(server_id)
+        if lm is None:
+            lm = self._locals[server_id] = LocalManager(
+                server_id, self.gm.bus, clock=self.engine.clock,
+                vm_hint_rate_per_s=self._hint_rate[0],
+                vm_hint_burst=self._hint_rate[1])
+        return lm
+
+    def policy_for(self, workload: str) -> AgentPolicy:
+        return self.policies.get(workload, self.default_policy)
+
+    def is_leader(self, agent: WorkloadAgent) -> bool:
+        return self._leaders.get(agent.vm.workload) == agent.vm.vm_id
+
+    # -- attach / detach -----------------------------------------------------
+    def attach(self, vm: VM) -> Optional[WorkloadAgent]:
+        if not vm.alive or not vm.server:
+            return None
+        agent = self.agents.get(vm.vm_id)
+        if agent is not None:
+            if agent.server_id == vm.server:
+                return agent            # already attached here
+            # migrated: move the endpoint to the new server's local manager
+            self._detach_endpoint(agent)
+            agent.rebind(self.local(vm.server).attach_vm(
+                vm.vm_id, vm.workload,
+                workload_manager=self.is_leader(agent)))
+            self.metrics["agents_rebound"] += 1
+            return agent
+        # the deployment fabric designates each workload's manager VM: the
+        # host only honors workload-wide hints from that endpoint
+        leader = self._leaders.setdefault(vm.workload, vm.vm_id)
+        ep = self.local(vm.server).attach_vm(
+            vm.vm_id, vm.workload, workload_manager=leader == vm.vm_id)
+        agent = WorkloadAgent(vm, ep, self, self.policy_for(vm.workload))
+        self.agents[vm.vm_id] = agent
+        self.metrics["agents_attached"] += 1
+        kill_t = self._repl_pending.pop(vm.vm_id, None)
+        if kill_t is not None:
+            self.metrics["replacements_placed"] += 1
+            # positive lead: the replacement was up before the original died
+            self.metrics["replacement_lead_s_sum"] += kill_t - self.now()
+        # a fresh VM of a diurnal workload should start on-phase
+        agent.on_phase(self.phase)
+        return agent
+
+    def attach_placed(self):
+        """Attach agents to every alive placed VM that lacks one (initial
+        adoption of a pre-populated cluster)."""
+        for vm in list(self.cluster.vms.values()):
+            self.attach(vm)
+
+    def _detach_endpoint(self, agent: WorkloadAgent):
+        lm = self._locals.get(agent.server_id)
+        if lm is not None:
+            lm.detach_vm(agent.vm.vm_id)
+
+    def detach(self, vm_id: str) -> Optional[WorkloadAgent]:
+        agent = self.agents.pop(vm_id, None)
+        if agent is None:
+            return None
+        self._detach_endpoint(agent)
+        workload = agent.vm.workload
+        if self._leaders.get(workload) == vm_id:
+            del self._leaders[workload]
+            for other in self.agents.values():      # re-elect a live leader
+                if other.vm.workload == workload:
+                    self._leaders[workload] = other.vm.vm_id
+                    lm = self._locals.get(other.server_id)
+                    if lm is not None:              # host-side promotion
+                        lm.authorize_workload_manager(other.vm.vm_id)
+                    break
+        return agent
+
+    # -- bus reactions -------------------------------------------------------
+    def _on_decisions(self, rec):
+        d = rec.value
+        if not isinstance(d, dict):
+            return
+        for dec in d.get("decisions", ()):
+            server = getattr(dec, "server", "")
+            if not server:
+                continue
+            vm = self.cluster.vms.get(dec.vm_id)
+            if vm is not None:
+                self.attach(vm)
+
+    def _on_eviction_record(self, rec):
+        d = rec.value
+        if not isinstance(d, dict) or d.get("event") != "cancelled":
+            return
+        agent = self.agents.get(d.get("vm", ""))
+        if agent is not None:           # re-arm: the next notice is fresh
+            agent.on_eviction_cancelled()
+
+    def _on_vm_killed(self, vm: VM):
+        agent = self.detach(vm.vm_id)
+        if agent is None:
+            return
+        lost = agent.on_killed(self.now())
+        self.metrics["lost_work_s"] += lost
+        if agent.policy.statefulness == STATELESS:
+            self.metrics["lost_work_s_stateless"] += lost
+            if agent.draining and not agent.acked_eviction:
+                # the falsifiable bar for "stateless workloads never lose
+                # anything": a noticed stateless VM must always have
+                # consented (acked) before the platform took it
+                self.metrics["stateless_killed_without_ack"] += 1
+        self.metrics["agent_vms_killed"] += 1
+
+    # -- workload-side actions ----------------------------------------------
+    def shed_load(self, agent: WorkloadAgent, new_util_p95: float):
+        """Drop a VM's p95 demand.  The cluster books follow through field
+        interception; the admission controller's reservation must be moved
+        by hand (it has no per-VM records), otherwise the later release
+        subtracts the new lower demand and leaks phantom reservation."""
+        vm = agent.vm
+        old = vm.util_p95
+        vm.util_p95 = new_util_p95
+        if vm.alive and vm.server and vm.oversubscribed:
+            adm = self.sched.admission
+            adm.reserved[vm.server] = max(
+                0.0, adm.reserved[vm.server] - vm.cores * (old - new_util_p95))
+
+    def request_replacement(self, agent: WorkloadAgent, event) -> str:
+        """Scale-out reaction to an eviction notice: submit a replacement VM
+        for placement elsewhere; the original can then be acked away."""
+        vm = agent.vm
+        now = self.now()
+        # lazily drop bookkeeping for replacements that never landed (their
+        # original's deadline is long past) so the map stays bounded when
+        # the cluster is too full to place them
+        if len(self._repl_pending) > 256:
+            stale = [k for k, kt in self._repl_pending.items()
+                     if kt < now - 600.0]
+            for k in stale:
+                del self._repl_pending[k]
+        self._repl_seq += 1
+        new_id = f"{vm.vm_id}.r{self._repl_seq}"
+        self.sched.submit(VM(new_id, vm.workload, "", vm.cores,
+                             util_p95=vm.util_p95, spot=vm.spot,
+                             harvest=vm.harvest))
+        self._repl_pending[new_id] = now + float(event.get("deadline_s", 0.0))
+        self.metrics["replacements_requested"] += 1
+        return new_id
+
+    def set_phase(self, phase: str):
+        """Diurnal phase flip: every leader agent re-asserts its workload's
+        phase hints through the guest channel (rate-limited at the host,
+        visible to the scheduler via the runtime-hint topic)."""
+        if phase == self.phase:
+            return
+        self.phase = phase
+        self.metrics["phase_changes"] += 1
+        for agent in list(self.agents.values()):
+            agent.on_phase(phase)
+
+    # -- reporting -----------------------------------------------------------
+    def replacement_lead_s_mean(self) -> float:
+        n = self.metrics["replacements_placed"]
+        return self.metrics["replacement_lead_s_sum"] / n if n else 0.0
+
+    def telemetry(self) -> Dict[str, float]:
+        out = dict(self.metrics)
+        out["agents_live"] = float(len(self.agents))
+        out["replacement_lead_s_mean"] = self.replacement_lead_s_mean()
+        return out

@@ -130,6 +130,15 @@ class GlobalManager:
         return [v for _, v in self.store.scan("hints/")
                 if v.get("workload") == workload]
 
+    def purge_resource_hints(self, workload: str, resource: str):
+        """Drop per-resource hint state once the resource is gone (its VM
+        was killed) — under 100k-VM churn these entries otherwise grow
+        without bound.  Workload-level ('*') hints are untouched."""
+        if resource == "*":
+            return
+        for scope in ("deployment", "runtime"):
+            self.store.delete(f"hints/{scope}/{workload}/{resource}")
+
     # -- aggregation (§4.1) ----------------------------------------------------
     def aggregate(self, level: str = "server") -> Dict[str, Dict[str, Any]]:
         """Aggregate numeric hints by resource prefix.

@@ -161,3 +161,7 @@ TOPIC_PLATFORM_HINTS = "wi.hints.platform"
 # the authoritative eviction notice/kill stream.
 TOPIC_SCHED_DECISIONS = "wi.sched.decisions"
 TOPIC_EVICTIONS = "wi.sched.evictions"
+# Guest acknowledgements of scheduled events, fanned in by local managers
+# (§4: the workload half of the bidirectional loop — e.g. "done draining,
+# take the VM early").
+TOPIC_EVENT_ACKS = "wi.events.acks"

@@ -27,27 +27,49 @@ class VMEndpoint:
     on_event           — optional push callback
     """
 
-    def __init__(self, vm_id: str, workload: str, local: "LocalManager"):
+    def __init__(self, vm_id: str, workload: str, local: "LocalManager",
+                 workload_manager: bool = False):
         self.vm_id, self.workload, self._local = vm_id, workload, local
         self._events: deque = deque(maxlen=256)
         self._acked: set = set()
         self._cb: Optional[Callable[[Dict[str, Any]], None]] = None
         self.metadata: Dict[str, Any] = {"vm_id": vm_id, "workload": workload}
+        # host-side flag: only the deployment's designated workload-manager
+        # VM (e.g. a YARN RM) may assert workload-wide runtime hints
+        self._workload_manager = workload_manager
 
-    def set_runtime_hints(self, hint_dict: Dict[str, Any]) -> bool:
-        return self._local._vm_hint(self.vm_id, self.workload, hint_dict)
+    def set_runtime_hints(self, hint_dict: Dict[str, Any],
+                          workload_wide: bool = False) -> bool:
+        """KVP/XenStore-style hint write.  ``workload_wide`` asserts the
+        hints for the whole workload (resource ``*``) rather than this VM —
+        the in-guest workload-manager path (e.g. a YARN RM adapting its
+        deployment's hints to the diurnal phase).  Authorization is
+        host-side: the write is rejected unless this VM was attached (or
+        later promoted) as the workload's manager."""
+        return self._local._vm_hint(self, hint_dict, workload_wide)
 
     def scheduled_events(self) -> List[Dict[str, Any]]:
         return [e for e in self._events if e["seq"] not in self._acked]
 
     def ack_event(self, seq: int):
+        if seq in self._acked:
+            return                      # idempotent: one ack per event
+        event = next((e for e in reversed(self._events)
+                      if e.get("seq") == seq), None)
+        if event is None:
+            return      # unknown or expired seq: nothing to ack (and the
+            # ring-pruning bound on _acked must hold — see _deliver)
         self._acked.add(seq)
-        self._local._event_acked(self.vm_id, seq)
+        self._local._event_acked(self.vm_id, seq, event)
 
     def on_event(self, cb: Callable[[Dict[str, Any]], None]):
         self._cb = cb
 
     def _deliver(self, event: Dict[str, Any]):
+        if len(self._events) == self._events.maxlen:
+            # the oldest event falls off the ring buffer: drop its ack-seq
+            # too, so ``_acked`` can never outgrow the buffer
+            self._acked.discard(self._events[0].get("seq"))
         self._events.append(event)
         if self._cb:
             self._cb(event)
@@ -64,20 +86,45 @@ class LocalManager:
                                     self.clock)
         self.stats = defaultdict(int)
         self._acks: Dict[int, set] = defaultdict(set)
+        self._vm_acks: Dict[str, set] = defaultdict(set)    # vm -> seqs
         bus.subscribe(H.TOPIC_PLATFORM_HINTS, self._on_platform_hint)
 
     # -- VM lifecycle -------------------------------------------------------
-    def attach_vm(self, vm_id: str, workload: str) -> VMEndpoint:
-        ep = VMEndpoint(vm_id, workload, self)
+    def attach_vm(self, vm_id: str, workload: str,
+                  workload_manager: bool = False) -> VMEndpoint:
+        ep = VMEndpoint(vm_id, workload, self, workload_manager)
         self._vms[vm_id] = ep
         return ep
 
+    def authorize_workload_manager(self, vm_id: str, on: bool = True):
+        """Host-side promotion/demotion of a VM's workload-manager role
+        (e.g. the deployment fabric re-elects a leader after a kill)."""
+        ep = self._vms.get(vm_id)
+        if ep is not None:
+            ep._workload_manager = on
+
     def detach_vm(self, vm_id: str):
+        """Drop the endpoint AND every per-VM host-side entry (token-bucket
+        state, ack fan-in sets) — under 100k-VM churn these otherwise grow
+        without bound."""
         self._vms.pop(vm_id, None)
+        self._limiter.forget((vm_id,))
+        for seq in self._vm_acks.pop(vm_id, ()):
+            acked = self._acks.get(seq)
+            if acked is not None:
+                acked.discard(vm_id)
+                if not acked:
+                    del self._acks[seq]
 
     # -- guest -> platform ------------------------------------------------------
-    def _vm_hint(self, vm_id: str, workload: str,
-                 hint_dict: Dict[str, Any]) -> bool:
+    def _vm_hint(self, ep: VMEndpoint, hint_dict: Dict[str, Any],
+                 workload_wide: bool = False) -> bool:
+        vm_id, workload = ep.vm_id, ep.workload
+        if workload_wide and not ep._workload_manager:
+            # any guest can hint about itself; only the designated
+            # workload-manager VM may speak for the whole workload
+            self.stats["vm_hint_unauthorized"] += 1
+            return False
         if not self._limiter.allow((vm_id,)):
             self.stats["vm_hint_rate_limited"] += 1
             return False
@@ -86,7 +133,7 @@ class LocalManager:
         except H.HintError:
             self.stats["vm_hint_invalid"] += 1
             return False
-        resource = f"{self.server_id}/{vm_id}"
+        resource = "*" if workload_wide else f"{self.server_id}/{vm_id}"
         rec = H.HintRecord(workload=workload, resource=resource,
                            scope=H.Scope.RUNTIME.value, hints=hint_dict,
                            source=f"vm:{vm_id}", ts=self.clock())
@@ -114,9 +161,20 @@ class LocalManager:
             ep._deliver(d)
             self.stats["events_delivered"] += 1
 
-    def _event_acked(self, vm_id: str, seq: int):
+    def _event_acked(self, vm_id: str, seq: int,
+                     event: Optional[Dict[str, Any]] = None):
+        """Record a guest ack and forward it onto the bus so the platform
+        can react (the eviction pipeline releases acked VMs early)."""
         self._acks[seq].add(vm_id)
+        self._vm_acks[vm_id].add(seq)
         self.stats["events_acked"] += 1
+        ack = {"vm": vm_id, "server": self.server_id, "seq": seq,
+               "t": self.clock()}
+        if event is not None:
+            ack["event"] = event.get("event")
+            ack["resource"] = event.get("resource")
+            ack["workload"] = event.get("workload")
+        self.bus.publish(H.TOPIC_EVENT_ACKS, ack, key=vm_id)
 
     def acked(self, seq: int) -> set:
         return self._acks.get(seq, set())

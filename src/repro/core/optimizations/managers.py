@@ -41,6 +41,15 @@ class SpotManager(OptimizationManager):
         super().__init__(gm)
         self.notice_s = eviction_notice_s
         self.priority_hint: Dict[str, float] = {}   # vm -> priority (low=evict)
+        # drop per-resource priority state when its VM is gone: under churn
+        # the map otherwise grows monotonically with dead-VM keys
+        gm.bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction_record)
+
+    def _on_eviction_record(self, rec):
+        d = rec.value
+        if isinstance(d, dict) and d.get("event") in (
+                "evicted", "early_released", "already_gone"):
+            self.priority_hint.pop(d.get("resource", ""), None)
 
     def on_runtime_hint(self, d):
         p = d["hints"].get("x-preemption-priority")

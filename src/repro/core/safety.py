@@ -36,6 +36,11 @@ class RateLimiter:
         self._state[key] = (tokens, now)
         return False
 
+    def forget(self, key):
+        """Drop a principal's bucket (its VM detached / workload retired) so
+        per-key state cannot grow unboundedly under churn."""
+        self._state.pop(key, None)
+
 
 @dataclass
 class ConsistencyVerdict:

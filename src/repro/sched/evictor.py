@@ -55,6 +55,10 @@ class EvictionTicket:
     cancelled: bool = False
     killed: bool = False
     killed_t: float = -1.0
+    # how the ticket resolved: pending | killed | early_released |
+    # cancelled | already_gone.  ``killed``/``cancelled`` stay in sync for
+    # existing callers; ``already_gone`` tickets never count as kills.
+    outcome: str = "pending"
 
     @property
     def lead_time_s(self) -> float:
@@ -73,6 +77,13 @@ class EvictionPipeline:
         self.tickets: Dict[str, EvictionTicket] = {}
         self.log: List[EvictionTicket] = []
         self.stats: Dict[str, int] = defaultdict(int)
+        # acks that raced ahead of their ticket: an optimization manager's
+        # *advisory* eviction notice reaches the guest before the pipeline
+        # books the authoritative ticket, and an eager (stateless) agent
+        # acks synchronously.  vm_id -> ack time; entries are only honored
+        # for a ticket issued at that same instant and purged otherwise.
+        self._acked_ahead: Dict[str, float] = {}
+        self._in_submit = False         # defer in-wave acks (see on_ack)
 
     # -- intake -------------------------------------------------------------
     def submit(self, actions: List, source: str = "sched"
@@ -82,14 +93,26 @@ class EvictionPipeline:
         eviction storm submits hundreds of actions at once)."""
         out = []
         notices: List[tuple] = []
-        for a in actions:
-            if getattr(a, "kind", None) != "evict":
-                continue
-            t = self._schedule(a, source, notices)
-            if t is not None:
-                out.append(t)
+        self._in_submit = True          # guest acks during the wave defer
+        try:
+            for a in actions:
+                if getattr(a, "kind", None) != "evict":
+                    continue
+                t = self._schedule(a, source, notices)
+                if t is not None:
+                    out.append(t)
+        finally:
+            self._in_submit = False
         if notices:
             self.gm.bus.publish_batch(H.TOPIC_EVICTIONS, notices)
+        # only now honor acks that arrived during the wave (racing the
+        # managers' advisory notices or this pipeline's own), so release
+        # records never precede their notice records on the bus
+        for vm_id, t_ack in list(self._acked_ahead.items()):
+            ticket = self.tickets.get(vm_id)
+            if ticket is not None and t_ack >= ticket.issued_t - 1e-9:
+                del self._acked_ahead[vm_id]
+                self.early_release(vm_id)
         return out
 
     def _schedule(self, action, source: str,
@@ -155,14 +178,34 @@ class EvictionPipeline:
             # capacity the eviction was meant to free is already free
             self.cancel(ticket.vm_id)
             return
-        if vm is not None and vm.alive:
-            if self.release_cb is not None:
-                self.release_cb(vm)
-            self.cluster.kill_vm(ticket.vm_id)
+        if vm is None or not vm.alive:
+            # the VM died between notice and deadline (churn, a scenario
+            # kill, region failure).  Recording this as a kill would feed a
+            # bogus lead time into min_lead_time_s()/violations(); it is a
+            # distinct outcome, not an eviction the pipeline performed.
+            ticket.outcome = "already_gone"
+            ticket.killed_t = self.engine.clock.t
+            self.tickets.pop(ticket.vm_id, None)
+            self.gm.checker.note_eviction_done(ticket.resource)
+            self.gm.purge_resource_hints(ticket.workload, ticket.resource)
+            self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+                "event": "already_gone", "vm": ticket.vm_id,
+                "workload": ticket.workload, "resource": ticket.resource,
+                "t": ticket.killed_t, "source": ticket.source},
+                key=ticket.vm_id)
+            self.log.append(ticket)
+            self.stats["already_gone"] += 1
+            return
+        if self.release_cb is not None:
+            self.release_cb(vm)
+        self.cluster.kill_vm(ticket.vm_id)
         ticket.killed = True
+        ticket.outcome = "killed"
         ticket.killed_t = self.engine.clock.t
         self.tickets.pop(ticket.vm_id, None)
         self.gm.checker.note_eviction_done(ticket.resource)
+        # the resource is gone: per-VM hint state must not outlive it
+        self.gm.purge_resource_hints(ticket.workload, ticket.resource)
         self.gm.bus.publish(H.TOPIC_EVICTIONS, {
             "event": "evicted", "vm": ticket.vm_id,
             "workload": ticket.workload, "resource": ticket.resource,
@@ -171,12 +214,64 @@ class EvictionPipeline:
         self.log.append(ticket)
         self.stats["kills"] += 1
 
+    # -- guest acks: release before the deadline ----------------------------
+    def on_ack(self, vm_id: str, t: float) -> bool:
+        """A guest acknowledged an eviction notice.  Release its ticket if
+        one is booked; otherwise remember the ack — the authoritative
+        ticket may be created later in the same synchronous wave (managers
+        pre-notify before the pipeline books).  Acks arriving mid-wave are
+        always deferred to ``submit``'s epilogue so the release record
+        never beats the wave's batched notice records onto the bus."""
+        if not self._in_submit and vm_id in self.tickets:
+            return self.early_release(vm_id)
+        now = self.engine.clock.t
+        # acks from earlier instants can never match a future ticket:
+        # purge them so the map only ever holds the current wave
+        if self._acked_ahead:
+            stale = [v for v, ts in self._acked_ahead.items() if ts < now]
+            for v in stale:
+                del self._acked_ahead[v]
+        self._acked_ahead[vm_id] = t if t >= now else now
+        return False
+
+    def early_release(self, vm_id: str) -> bool:
+        """The workload acknowledged the notice (checkpointed / drained /
+        replacement up): take the VM *now* and free its capacity instead of
+        idling until the deadline.  The pending ladder kill becomes a no-op.
+        Consented releases are not notice-window violations."""
+        ticket = self.tickets.get(vm_id)
+        if ticket is None or ticket.killed or ticket.cancelled:
+            return False
+        vm = self.cluster.vms.get(vm_id)
+        if vm is None or not vm.alive:
+            return False                # the deadline kill will classify it
+        if f"{vm.server}/{vm.vm_id}" != ticket.resource:
+            return self.cancel(vm_id)   # moved away: capacity already free
+        if self.release_cb is not None:
+            self.release_cb(vm)
+        self.cluster.kill_vm(vm_id)
+        ticket.killed = True
+        ticket.outcome = "early_released"
+        ticket.killed_t = self.engine.clock.t
+        self.tickets.pop(vm_id, None)
+        self.gm.checker.note_eviction_done(ticket.resource)
+        self.gm.purge_resource_hints(ticket.workload, ticket.resource)
+        self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+            "event": "early_released", "vm": vm_id,
+            "workload": ticket.workload, "resource": ticket.resource,
+            "lead_time_s": ticket.lead_time_s, "notice_s": ticket.notice_s,
+            "t": ticket.killed_t, "source": ticket.source}, key=vm_id)
+        self.log.append(ticket)
+        self.stats["early_releases"] += 1
+        return True
+
     def cancel(self, vm_id: str) -> bool:
         """Capacity recovered before the deadline: the VM keeps running."""
         ticket = self.tickets.pop(vm_id, None)
         if ticket is None or ticket.killed:
             return False
         ticket.cancelled = True
+        ticket.outcome = "cancelled"
         self.gm.checker.note_eviction_done(ticket.resource)
         self.gm.bus.publish(H.TOPIC_EVICTIONS, {
             "event": "cancelled", "vm": vm_id, "workload": ticket.workload,
@@ -188,10 +283,13 @@ class EvictionPipeline:
     # -- invariants ---------------------------------------------------------
     def violations(self) -> List[EvictionTicket]:
         """Completed evictions whose achieved lead time undercut the hinted
-        notice window (must be empty — the acceptance invariant)."""
+        notice window (must be empty — the acceptance invariant).  Early
+        releases are excluded: the workload *asked* to go before the
+        deadline, so a short lead is consent, not a broken promise."""
         return [t for t in self.log
-                if t.killed and t.lead_time_s < t.notice_s - 1e-9]
+                if t.outcome == "killed"
+                and t.lead_time_s < t.notice_s - 1e-9]
 
     def min_lead_time_s(self) -> float:
-        leads = [t.lead_time_s for t in self.log if t.killed]
+        leads = [t.lead_time_s for t in self.log if t.outcome == "killed"]
         return min(leads) if leads else float("inf")

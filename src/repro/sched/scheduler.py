@@ -72,6 +72,10 @@ class Scheduler:
         self._record_buf: List[tuple] = []
         self.gm.bus.subscribe(H.TOPIC_DEPLOY_HINTS, self._on_hint_change)
         self.gm.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_hint_change)
+        # guest acks close the bidirectional loop: a VM that acknowledges
+        # its eviction notice is released (and its capacity freed) before
+        # the deadline instead of idling until the ladder kill
+        self.gm.bus.subscribe(H.TOPIC_EVENT_ACKS, self._on_event_ack)
         # direct-store hint path (set_hints with runtime scope never hits
         # the bus) — without this the placer would keep serving stale hints
         self.gm.hint_listeners.append(self._mark_dirty)
@@ -90,6 +94,23 @@ class Scheduler:
         d = rec.value
         if isinstance(d, dict) and "workload" in d:
             self._mark_dirty(d["workload"])
+
+    def _on_event_ack(self, rec):
+        """Guest acknowledged a scheduled event (fanned in by its local
+        manager).  An acked eviction notice means the workload is done
+        (checkpointed / drained / replacement running): release the VM now
+        — or, when the ack raced ahead of the pipeline's ticket, as soon
+        as the ticket is booked (``EvictionPipeline.on_ack``)."""
+        d = rec.value
+        if not isinstance(d, dict):
+            return
+        if d.get("event") == H.PlatformEvent.EVICTION_NOTICE.value:
+            # the authoritative resolution count lives in
+            # evictor.stats["early_releases"] (acks that resolve during a
+            # wave are deferred to submit's epilogue and would be missed
+            # by any counting done here)
+            self.evictor.on_ack(d.get("vm", ""),
+                                float(d.get("t", self.engine.clock.t)))
 
     def react_to_hints(self) -> List[Decision]:
         """Re-place VMs of workloads whose hints changed: a workload that is
@@ -184,7 +205,10 @@ class Scheduler:
         for sid in list(self.cluster.servers_in_region(region)):
             if freed >= cores_needed or moved >= budget:
                 break
-            for vid in list(self.cluster.vm_ids_on(sid)):
+            # sorted: vm_ids_on returns a set, and victim choice under the
+            # migration budget must not depend on PYTHONHASHSEED (seeded
+            # benchmark runs must reproduce exactly)
+            for vid in sorted(self.cluster.vm_ids_on(sid)):
                 if freed >= cores_needed or moved >= budget:
                     break
                 vm = self.cluster.vms.get(vid)

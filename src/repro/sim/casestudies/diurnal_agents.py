@@ -1,0 +1,195 @@
+"""Scenario: the bidirectional loop under diurnal churn.
+
+A two-region cluster runs three workload classes with per-VM
+``WorkloadAgent``s attached (``repro.agents``), then gets hit with the
+usual storm (spot-reclaim waves + maintenance power events) while the day
+cycles between peak and off-peak phases:
+
+  * **web** — stateless scale-out frontends: on an eviction notice the
+    agent requests a replacement VM and acks immediately, so the platform
+    early-releases the VM long before the kill deadline (capacity freed,
+    zero lost work);
+  * **bigdata** — stateful batch: the agent checkpoints (latency
+    proportional to state size) and acks once durable.  "Light" shards
+    finish inside their hinted 120 s notice window (early release, ~0 lost
+    work); "heavy" shards cannot, ride the ladder to the deadline, and
+    their un-checkpointed work is metered as lost-work-seconds.  Off-peak,
+    the workload's leader agent re-asserts workload-wide runtime hints
+    (delay-tolerant, deeply preemptible, region-independent) and the
+    scheduler migrates shards to the cheap region; at peak the hints swing
+    back;
+  * **videoconf** — interactive, small partial state: raises availability
+    (and drops preemptibility) at peak — power events then throttle rather
+    than evict it, and the agents shed load in response.
+
+Invariants under test: **zero notice-window violations** no matter how the
+storm and the agents interleave; a large fraction of evictions resolved by
+early release before the deadline; stateless lost work exactly zero.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, Tuple
+
+from repro.agents import (PARTIAL, STATEFUL, STATELESS, AgentPolicy,
+                          AgentRuntime, DiurnalProfile)
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+
+N_SERVERS_PER_REGION = 30
+CORES_PER_SERVER = 48
+TICK_S = 5.0
+PHASE_PERIOD_S = 300.0
+STORM_WAVES = 6
+WAVE_PERIOD_S = 120.0
+WAVE_CORES = 200.0
+POWER_EVENTS = 8
+BIGDATA_NOTICE_S = 120.0
+
+N_WEB = 8               # workloads per class (VM counts scale with these)
+N_BIGDATA = 6
+N_VIDEOCONF = 4
+WEB_VMS = 15
+BIGDATA_VMS = 10
+VIDEOCONF_VMS = 10
+
+
+def build(seed: int = 0, n_servers_per_region: int = N_SERVERS_PER_REGION,
+          vm_scale: float = 1.0) -> Tuple[Scheduler, AgentRuntime]:
+    rng = random.Random(seed)
+    s = Scheduler(default_notice_s=30.0)
+    for r in ("region-0", "region-green"):
+        for i in range(n_servers_per_region):
+            s.cluster.add_server(f"{r}/s{i}", CORES_PER_SERVER, region=r)
+
+    policies: Dict[str, AgentPolicy] = {}
+
+    # web: stateless scale-out frontends (replace + ack early)
+    for i in range(N_WEB):
+        w = f"web-{i}"
+        s.gm.register_workload(w, {
+            "scale_out_in": True, "scale_up_down": True,
+            "preemptibility_pct": 70.0, "availability_nines": 3.0,
+            "delay_tolerance_ms": 5_000.0})
+        policies[w] = AgentPolicy(statefulness=STATELESS, scale_out_in=True)
+
+    # bigdata: stateful batch, hinted 120 s notice, diurnal hint swings.
+    # Even workloads carry "light" state (checkpoint fits in the window),
+    # odd ones "heavy" state (the deadline wins; work is lost).
+    diurnal_bigdata = DiurnalProfile(
+        peak_hints={"delay_tolerance_ms": 5_000.0,
+                    "preemptibility_pct": 20.0,
+                    "region_independent": False},
+        offpeak_hints={"delay_tolerance_ms": 120_000.0,
+                       "preemptibility_pct": 80.0,
+                       "region_independent": True})
+    for i in range(N_BIGDATA):
+        w = f"bigdata-{i}"
+        s.gm.register_workload(w, {
+            "scale_out_in": True, "scale_up_down": True,
+            "preemptibility_pct": 60.0, "availability_nines": 2.0,
+            "delay_tolerance_ms": 30_000.0,
+            "x-eviction-notice-s": BIGDATA_NOTICE_S})
+        state_gb = 8.0 if i % 2 == 0 else 30.0      # 40 s vs 150 s ckpt
+        policies[w] = AgentPolicy(statefulness=STATEFUL, state_gb=state_gb,
+                                  ckpt_gbps=0.2, diurnal=diurnal_bigdata)
+
+    # videoconf: interactive, small partial state, availability up at peak
+    diurnal_vc = DiurnalProfile(
+        peak_hints={"availability_nines": 4.0, "preemptibility_pct": 0.0},
+        offpeak_hints={"availability_nines": 2.0,
+                       "preemptibility_pct": 40.0})
+    for i in range(N_VIDEOCONF):
+        w = f"videoconf-{i}"
+        s.gm.register_workload(w, {
+            "scale_up_down": True, "availability_nines": 3.0,
+            "delay_tolerance_ms": 1_000.0})
+        policies[w] = AgentPolicy(statefulness=PARTIAL, state_gb=2.0,
+                                  ckpt_gbps=1.0, diurnal=diurnal_vc)
+
+    vm = 0
+    for i in range(N_WEB):
+        for _ in range(max(1, round(WEB_VMS * vm_scale))):
+            s.submit(VM(f"vm{vm}", f"web-{i}", "", 4,
+                        util_p95=rng.uniform(0.2, 0.6), spot=True))
+            vm += 1
+    for i in range(N_BIGDATA):
+        for _ in range(max(1, round(BIGDATA_VMS * vm_scale))):
+            s.submit(VM(f"vm{vm}", f"bigdata-{i}", "", 8,
+                        util_p95=rng.uniform(0.3, 0.8), spot=True))
+            vm += 1
+    for i in range(N_VIDEOCONF):
+        for _ in range(max(1, round(VIDEOCONF_VMS * vm_scale))):
+            s.submit(VM(f"vm{vm}", f"videoconf-{i}", "", 4,
+                        util_p95=rng.uniform(0.4, 0.9)))
+            vm += 1
+    s.schedule_pending()
+
+    rt = AgentRuntime(s, policies=policies)
+    return s, rt
+
+
+def run(seed: int = 0, n_servers_per_region: int = N_SERVERS_PER_REGION,
+        vm_scale: float = 1.0) -> Dict[str, float]:
+    rng = random.Random(seed + 1)
+    s, rt = build(seed, n_servers_per_region, vm_scale)
+    placed0 = s.stats["placed"]
+
+    horizon = 60.0 + STORM_WAVES * WAVE_PERIOD_S + 300.0
+
+    # the day: peak <-> off-peak flips through the agent runtime
+    def flip_phase():
+        rt.set_phase("offpeak" if rt.phase == "peak" else "peak")
+    s.engine.every(PHASE_PERIOD_S, flip_phase, horizon)
+
+    # the storm: reclaim waves alternating regions + power events (offset
+    # from the tick grid so replacements pay a real placement delay)
+    for w in range(STORM_WAVES):
+        region = "region-0" if w % 2 == 0 else "region-green"
+        s.engine.at(61.0 + w * WAVE_PERIOD_S,
+                    lambda r=region: s.capacity_crunch(r, WAVE_CORES))
+    servers = list(s.cluster.servers)
+    for i in range(POWER_EVENTS):
+        srv = rng.choice(servers)
+        s.engine.at(93.0 + i * 100.0,
+                    lambda sv=srv: s.power_event(sv, shed_frac=0.4))
+
+    s.start(TICK_S, horizon)            # place replacements as they arrive
+    s.run_until(horizon)
+
+    ev = s.evictor
+    killed = [t for t in ev.log if t.outcome == "killed"]
+    early = [t for t in ev.log if t.outcome == "early_released"]
+    resolved = len(killed) + len(early)
+    m = rt.telemetry()
+    alive = sum(1 for v in s.cluster.vms.values() if v.alive and v.server)
+    return {
+        "placed": placed0,
+        "evictions_killed": len(killed),
+        "early_releases": len(early),
+        "early_release_frac": (len(early) / resolved) if resolved else 0.0,
+        "violations": len(ev.violations()),
+        "min_lead_s": min((t.lead_time_s for t in killed),
+                          default=float("inf")),
+        "already_gone": ev.stats.get("already_gone", 0),
+        "cancellations": ev.stats.get("cancellations", 0),
+        "lost_work_s": m.get("lost_work_s", 0.0),
+        "lost_work_s_stateless": m.get("lost_work_s_stateless", 0.0),
+        "stateless_killed_without_ack":
+            m.get("stateless_killed_without_ack", 0.0),
+        "checkpoints_started": m.get("checkpoints_started", 0.0),
+        "checkpoints_completed": m.get("checkpoints_completed", 0.0),
+        "replacements_requested": m.get("replacements_requested", 0.0),
+        "replacements_placed": m.get("replacements_placed", 0.0),
+        "replacement_lead_s_mean": m.get("replacement_lead_s_mean", 0.0),
+        "hint_adaptations": m.get("hint_adaptations", 0.0),
+        "shed_reactions": m.get("shed_reactions", 0.0),
+        "hint_migrations": s.stats.get("hint_migrations", 0),
+        "agents_attached": m.get("agents_attached", 0.0),
+        "alive_vms": alive,
+    }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

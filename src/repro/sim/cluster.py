@@ -107,6 +107,10 @@ class Cluster:
         self._dirty_vms: Set[str] = set()
         self._dirty_servers: Set[str] = set()
         self._view_regions_version = -1
+        # fired (with the VM) right after any kill_vm marks a VM dead —
+        # the workload-side agent runtime uses this to detach agents and
+        # meter lost work, whatever path performed the kill
+        self.kill_listeners: List = []
         self.add_region(Region("region-0", 1.0, 546.0))
         self.add_region(Region("region-green", 0.78, 267.0))
 
@@ -236,8 +240,10 @@ class Cluster:
 
     def kill_vm(self, vm_id: str):
         vm = self.vms.get(vm_id)
-        if vm is not None:
+        if vm is not None and vm.alive:
             vm.alive = False        # interception updates the books
+            for cb in self.kill_listeners:
+                cb(vm)
 
     # -- pending queue (scheduler feed) -------------------------------------
     def enqueue(self, vm: VM):

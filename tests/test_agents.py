@@ -1,0 +1,378 @@
+"""Tests for the workload-side agent runtime (src/repro/agents/) and the
+ack -> early-release -> cancel path it drives through the eviction
+pipeline, plus the local-manager churn-hygiene fixes that ride along."""
+import random
+
+from repro.agents import (PARTIAL, STATEFUL, STATELESS, AgentPolicy,
+                          AgentRuntime, DiurnalProfile)
+from repro.core import hints as H
+from repro.core.bus import Bus
+from repro.core.local_manager import LocalManager
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+
+
+def make_sched(n_servers=2, cores=32, regions=("region-0",)):
+    s = Scheduler(default_notice_s=30.0)
+    for r in regions:
+        for i in range(n_servers):
+            s.cluster.add_server(f"{r}/s{i}", cores, region=r)
+    return s
+
+
+def submit_and_place(s, vm):
+    s.submit(vm)
+    s.schedule_pending()
+
+
+# ---------------------------------------------------------------------------
+# ack -> early release -> cancel (the platform half of the loop)
+# ---------------------------------------------------------------------------
+
+
+def test_stateless_agent_acks_and_vm_is_released_before_deadline():
+    s = make_sched()
+    s.gm.register_workload("web", {
+        "scale_out_in": True, "preemptibility_pct": 70.0,
+        "availability_nines": 2.0, "delay_tolerance_ms": 5_000.0})
+    submit_and_place(s, VM("v0", "web", "", 8, spot=True))
+    rt = AgentRuntime(s, policies={
+        "web": AgentPolicy(statefulness=STATELESS, scale_out_in=True)})
+    r = s.capacity_crunch("region-0", 8)
+    assert r["evictions"] == 1
+    # the ack raced the ticket (manager pre-notice) and was still honored:
+    # the VM is gone immediately, long before the 30 s deadline
+    assert not s.cluster.vms["v0"].alive
+    assert s.evictor.stats["early_releases"] == 1
+    assert s.evictor.log[0].outcome == "early_released"
+    assert s.evictor.violations() == []         # consent, not a violation
+    # its capacity is actually free again
+    sid = s.evictor.log[0].resource.rsplit("/", 1)[0]
+    assert s.admission.nominal[sid] == 0.0
+    # the ladder kill at the deadline is a no-op
+    s.run_until(100.0)
+    assert s.evictor.stats["kills"] == 0
+    # a replacement VM was requested and lands on the next tick
+    assert rt.metrics["replacements_requested"] == 1
+    s.tick()
+    assert rt.metrics["replacements_placed"] == 1
+    assert sum(1 for v in s.cluster.vms.values()
+               if v.alive and v.workload == "web") == 1
+
+
+def test_stateful_agent_checkpoints_then_drains_with_zero_lost_work():
+    s = make_sched()
+    s.gm.register_workload("batch", {
+        "preemptibility_pct": 60.0, "availability_nines": 2.0,
+        "delay_tolerance_ms": 30_000.0, "x-eviction-notice-s": 120.0})
+    submit_and_place(s, VM("b0", "batch", "", 8, spot=True))
+    # 8 GB at 0.2 GB/s -> 40 s checkpoint, well inside the 120 s window
+    rt = AgentRuntime(s, policies={
+        "batch": AgentPolicy(statefulness=STATEFUL, state_gb=8.0,
+                             ckpt_gbps=0.2)})
+    s.capacity_crunch("region-0", 8)
+    s.run_until(39.0)
+    assert s.cluster.vms["b0"].alive            # still checkpointing
+    s.run_until(41.0)
+    assert not s.cluster.vms["b0"].alive        # drained right after
+    t = s.evictor.log[0]
+    assert t.outcome == "early_released"
+    assert abs(t.lead_time_s - 40.0) < 1e-6     # released at ckpt completion
+    assert rt.metrics["checkpoints_completed"] == 1
+    assert rt.metrics["lost_work_s"] == 0.0     # checkpoint was durable
+    assert s.evictor.violations() == []
+
+
+def test_stateful_agent_slow_checkpoint_rides_ladder_and_loses_work():
+    s = make_sched()
+    s.gm.register_workload("batch", {
+        "preemptibility_pct": 60.0, "availability_nines": 2.0,
+        "delay_tolerance_ms": 30_000.0, "x-eviction-notice-s": 60.0})
+    submit_and_place(s, VM("b0", "batch", "", 8, spot=True))
+    # 30 GB at 0.2 GB/s -> 150 s checkpoint, longer than the 60 s window
+    rt = AgentRuntime(s, policies={
+        "batch": AgentPolicy(statefulness=STATEFUL, state_gb=30.0,
+                             ckpt_gbps=0.2)})
+    s.run_until(10.0)                           # accrue some work first
+    s.capacity_crunch("region-0", 8)
+    s.run_until(200.0)
+    t = s.evictor.log[0]
+    assert t.outcome == "killed"                # deadline won
+    assert abs(t.lead_time_s - 60.0) < 1e-6     # full hinted window honored
+    assert s.evictor.violations() == []
+    # everything since attach (t=0) was lost at the t=70 kill
+    assert abs(rt.metrics["lost_work_s"] - 70.0) < 1e-6
+
+
+def test_agent_sheds_load_on_throttle_notice():
+    s = make_sched(n_servers=1)
+    s.gm.register_workload("vc", {
+        "scale_up_down": True, "availability_nines": 3.0,
+        "delay_tolerance_ms": 1_000.0})
+    submit_and_place(s, VM("v0", "vc", "", 8, util_p95=0.8))
+    rt = AgentRuntime(s, policies={
+        "vc": AgentPolicy(statefulness=PARTIAL, state_gb=1.0)})
+    r = s.power_event("region-0/s0", shed_frac=0.9)
+    assert r["throttles"] == 1
+    assert rt.metrics["shed_reactions"] == 1
+    vm = s.cluster.vms["v0"]
+    assert vm.util_p95 < 0.8                    # demand actually dropped
+    # and the cluster's incremental books followed the shed
+    s.cluster.assert_consistent()
+    # the low keep-priority runtime hint reached the store
+    eff = s.gm.effective_hints("vc", "region-0/s0/v0")
+    assert eff["x-preemption-priority"] == 5.0
+
+
+def test_shed_on_oversubscribed_vm_keeps_admission_books_exact():
+    s = make_sched(n_servers=1)
+    s.gm.register_workload("vc", {
+        "scale_up_down": True, "availability_nines": 2.0,
+        "delay_tolerance_ms": 1_000.0})
+    submit_and_place(s, VM("v0", "vc", "", 8, util_p95=0.5))
+    assert s.cluster.vms["v0"].oversubscribed
+    rt = AgentRuntime(s, policies={"vc": AgentPolicy(statefulness=PARTIAL)})
+    sid = s.cluster.vms["v0"].server
+    s.power_event(sid, shed_frac=0.9)
+    vm = s.cluster.vms["v0"]
+    assert vm.util_p95 < 0.5
+    # the admission reservation followed the shed: no phantom capacity
+    assert abs(s.admission.reserved[sid] - vm.cores * vm.util_p95) < 1e-9
+    # ...so a later release returns the books exactly to zero
+    s.placer.unplace(vm)
+    s.cluster.kill_vm("v0")
+    assert s.admission.reserved[sid] == 0.0
+    assert s.admission.nominal[sid] == 0.0
+
+
+def test_diurnal_leader_adapts_hints_and_scheduler_replaces():
+    s = make_sched(n_servers=2, regions=("region-0", "region-green"))
+    s.gm.register_workload("bd", {
+        "scale_out_in": True, "availability_nines": 2.0,
+        "delay_tolerance_ms": 30_000.0})
+    submit_and_place(s, VM("v0", "bd", "", 8))
+    assert s.cluster.servers[s.cluster.vms["v0"].server].region == "region-0"
+    rt = AgentRuntime(s, policies={"bd": AgentPolicy(
+        statefulness=STATEFUL, state_gb=1.0,
+        diurnal=DiurnalProfile(
+            peak_hints={"region_independent": False},
+            offpeak_hints={"region_independent": True,
+                           "preemptibility_pct": 80.0}))})
+    rt.set_phase("offpeak")
+    assert rt.metrics["hint_adaptations"] >= 1
+    # the workload-wide runtime hint is visible at workload granularity
+    assert s.gm.effective_hints("bd")["region_independent"] is True
+    s.tick()            # dirty workload -> re-placement to the cheap region
+    assert s.cluster.servers[s.cluster.vms["v0"].server].region == \
+        "region-green"
+    assert s.stats["hint_migrations"] == 1
+
+
+def test_agent_rebinds_endpoint_after_migration():
+    s = make_sched(n_servers=1, regions=("region-0", "region-green"))
+    s.gm.register_workload("flex", {
+        "region_independent": True, "availability_nines": 2.0})
+    submit_and_place(s, VM("v0", "flex", "", 8))
+    rt = AgentRuntime(s, policies={"flex": AgentPolicy()})
+    agent = rt.agents["v0"]
+    old_server = agent.server_id
+    assert s.cluster.servers[old_server].region == "region-green"
+    s.region_failover("region-green")
+    assert rt.agents["v0"] is agent             # same agent, new endpoint
+    assert agent.server_id != old_server
+    assert s.cluster.servers[agent.server_id].region == "region-0"
+    # the old server's local manager no longer routes to the stale endpoint
+    assert "v0" not in rt.local(old_server)._vms
+    assert rt.metrics["agents_rebound"] == 1
+
+
+def test_stale_checkpoint_timer_cannot_ack_a_later_ticket():
+    s = make_sched(n_servers=1)
+    s.gm.register_workload("bd", {
+        "preemptibility_pct": 80.0, "availability_nines": 1.0,
+        "x-eviction-notice-s": 200.0})
+    submit_and_place(s, VM("v0", "bd", "", 8, spot=True))
+    rt = AgentRuntime(s, policies={"bd": AgentPolicy(
+        statefulness=STATEFUL, state_gb=16.0, ckpt_gbps=0.2)})  # 80 s ckpt
+    s.capacity_crunch("region-0", 8)    # ckpt #1 timer fires at t=80
+    s.run_until(10.0)
+    assert s.evictor.cancel("v0")       # capacity recovered, agent re-arms
+    s.run_until(20.0)
+    s.capacity_crunch("region-0", 8)    # ckpt #2 runs t=20..100
+    s.run_until(99.0)
+    # the stale t=80 timer must NOT have acked ticket #2: checkpoint #2 is
+    # not durable yet, so the VM must still be running
+    assert s.cluster.vms["v0"].alive
+    s.run_until(101.0)
+    assert not s.cluster.vms["v0"].alive
+    t = s.evictor.log[-1]
+    assert t.outcome == "early_released"
+    assert abs(t.killed_t - 100.0) < 1e-6   # released at ckpt #2 completion
+    assert rt.metrics["lost_work_s"] == 0.0
+    assert s.evictor.violations() == []
+
+
+def test_cancelled_eviction_rearms_agent_for_the_next_notice():
+    s = make_sched(n_servers=1)
+    s.gm.register_workload("bd", {
+        "preemptibility_pct": 80.0, "availability_nines": 1.0,
+        "x-eviction-notice-s": 100.0})
+    submit_and_place(s, VM("v0", "bd", "", 8, spot=True))
+    rt = AgentRuntime(s, policies={"bd": AgentPolicy(
+        statefulness=STATEFUL, state_gb=30.0, ckpt_gbps=0.1)})  # 300 s ckpt
+    s.capacity_crunch("region-0", 8)
+    agent = rt.agents["v0"]
+    assert agent.draining
+    assert s.evictor.cancel("v0")               # capacity recovered
+    assert not agent.draining                   # re-armed
+    s.capacity_crunch("region-0", 8)            # a fresh wave
+    assert agent.draining
+    assert rt.metrics["eviction_notices_seen"] == 2
+
+
+def test_only_the_designated_workload_manager_may_set_workload_wide_hints():
+    bus = Bus()
+    lm = LocalManager("s0", bus, vm_hint_rate_per_s=100, vm_hint_burst=100)
+    mgr = lm.attach_vm("v0", "w", workload_manager=True)
+    peer = lm.attach_vm("v1", "w")
+    assert mgr.set_runtime_hints({"preemptibility_pct": 80.0},
+                                 workload_wide=True)
+    assert not peer.set_runtime_hints({"preemptibility_pct": 100.0},
+                                      workload_wide=True)
+    assert lm.stats["vm_hint_unauthorized"] == 1
+    assert peer.set_runtime_hints({"preemptibility_pct": 10.0})  # own VM ok
+    # host-side promotion (leader re-election) unlocks the channel
+    lm.authorize_workload_manager("v1")
+    assert peer.set_runtime_hints({"preemptibility_pct": 50.0},
+                                  workload_wide=True)
+
+
+def test_leader_reelection_promotes_next_agents_endpoint():
+    s = make_sched(n_servers=1)
+    s.gm.register_workload("bd", {
+        "preemptibility_pct": 80.0, "availability_nines": 1.0})
+    prof = DiurnalProfile(peak_hints={"preemptibility_pct": 20.0},
+                          offpeak_hints={"preemptibility_pct": 80.0})
+    pol = AgentPolicy(statefulness=STATELESS, scale_out_in=False,
+                      diurnal=prof)
+    s.submit(VM("v0", "bd", "", 4, spot=True))
+    s.submit(VM("v1", "bd", "", 4, spot=True))
+    s.schedule_pending()
+    rt = AgentRuntime(s, policies={"bd": pol})
+    assert rt.is_leader(rt.agents["v0"])
+    s.placer.unplace(s.cluster.vms["v0"])
+    s.cluster.kill_vm("v0")                     # leader dies
+    assert rt.is_leader(rt.agents["v1"])
+    rt.set_phase("offpeak")                     # new leader can adapt hints
+    assert rt.metrics["hint_adaptations"] >= 1
+    assert s.gm.effective_hints("bd")["preemptibility_pct"] == 80.0
+
+
+def test_dead_vm_hint_state_is_purged_from_spot_manager_and_store():
+    s = make_sched(n_servers=1)
+    s.gm.register_workload("web", {
+        "scale_out_in": True, "preemptibility_pct": 70.0,
+        "availability_nines": 2.0, "delay_tolerance_ms": 5_000.0})
+    submit_and_place(s, VM("v0", "web", "", 8, spot=True))
+    AgentRuntime(s, policies={
+        "web": AgentPolicy(statefulness=STATELESS, scale_out_in=True)})
+    sid = s.cluster.vms["v0"].server
+    resource = f"{sid}/v0"
+    # a runtime hint lands per-resource in the spot manager and the store
+    s.power_event(sid, shed_frac=0.1)           # no evictions, one throttle
+    assert resource in s.spot.priority_hint
+    assert s.gm.store.get(f"hints/runtime/web/{resource}") is not None
+    s.capacity_crunch("region-0", 8)            # agent acks -> early release
+    assert not s.cluster.vms["v0"].alive
+    # per-resource state died with the VM
+    assert resource not in s.spot.priority_hint
+    assert s.gm.store.get(f"hints/runtime/web/{resource}") is None
+
+
+# ---------------------------------------------------------------------------
+# local-manager churn hygiene (the leak fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_detach_vm_purges_limiter_and_ack_state():
+    bus = Bus()
+    lm = LocalManager("s0", bus, vm_hint_rate_per_s=100, vm_hint_burst=100)
+    ep = lm.attach_vm("v0", "w")
+    assert ep.set_runtime_hints({"scale_out_in": True})
+    ep._deliver({"event": "eviction_notice", "seq": 7})
+    ep.ack_event(7)
+    assert ("v0",) in lm._limiter._state
+    assert lm.acked(7) == {"v0"}
+    lm.detach_vm("v0")
+    assert ("v0",) not in lm._limiter._state
+    assert lm.acked(7) == set()
+    assert 7 not in lm._acks and "v0" not in lm._vm_acks
+
+
+def test_local_manager_churn_soak_state_stays_bounded():
+    bus = Bus()
+    lm = LocalManager("s0", bus, vm_hint_rate_per_s=1e6, vm_hint_burst=1e6)
+    rng = random.Random(3)
+    for i in range(2000):
+        vm_id = f"v{i}"
+        ep = lm.attach_vm(vm_id, f"w{i % 7}")
+        ep.set_runtime_hints({"preemptibility_pct": float(i % 100)})
+        for j in range(rng.randrange(0, 4)):
+            seq = i * 10 + j
+            ep._deliver({"event": "eviction_notice", "seq": seq})
+            ep.ack_event(seq)
+        lm.detach_vm(vm_id)
+    # after full churn NOTHING per-VM may survive
+    assert len(lm._vms) == 0
+    assert len(lm._limiter._state) == 0
+    assert len(lm._acks) == 0
+    assert len(lm._vm_acks) == 0
+
+
+def test_endpoint_acked_set_is_bounded_by_the_event_buffer():
+    bus = Bus()
+    lm = LocalManager("s0", bus)
+    ep = lm.attach_vm("v0", "w")
+    for seq in range(1000):                     # 4x the 256-deep ring
+        ep._deliver({"event": "eviction_notice", "seq": seq})
+        ep.ack_event(seq)
+    assert len(ep._events) == 256
+    assert len(ep._acked) <= 256                # old seqs fell off with ring
+    assert ep.scheduled_events() == []          # everything visible is acked
+    # acks for seqs the ring never held (or that expired) are ignored, so
+    # they cannot grow _acked either
+    acked_before = len(ep._acked)
+    ep.ack_event(10_000)
+    ep.ack_event(3)                             # long expired
+    assert len(ep._acked) == acked_before
+    assert lm.stats["events_acked"] == 1000
+
+
+def test_ack_event_is_idempotent():
+    bus = Bus()
+    lm = LocalManager("s0", bus)
+    ep = lm.attach_vm("v0", "w")
+    ep._deliver({"event": "eviction_notice", "seq": 1})
+    ep.ack_event(1)
+    ep.ack_event(1)
+    assert lm.stats["events_acked"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the full scenario
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_agents_scenario_meets_acceptance_bars():
+    from repro.sim.casestudies.diurnal_agents import run
+    r = run(seed=0, n_servers_per_region=20, vm_scale=0.6)
+    assert r["violations"] == 0
+    resolved = r["evictions_killed"] + r["early_releases"]
+    assert resolved > 20
+    assert r["early_release_frac"] >= 0.3
+    assert r["lost_work_s_stateless"] == 0.0
+    assert r["stateless_killed_without_ack"] == 0
+    assert r["replacements_placed"] > 0
+    assert r["replacement_lead_s_mean"] > 0.0   # replacements beat the kill
+    assert r["hint_adaptations"] > 0
+    assert r["hint_migrations"] > 0             # diurnal hints moved VMs

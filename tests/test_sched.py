@@ -217,6 +217,31 @@ def test_eviction_cancel_keeps_vm_alive():
     assert s.evictor.violations() == []
 
 
+def test_vm_dead_before_deadline_is_already_gone_not_a_kill():
+    s = make_scheduler(n_servers=1)
+    s.gm.register_workload("sp", {"preemptibility_pct": 80.0,
+                                  "availability_nines": 1.0,
+                                  "x-eviction-notice-s": 120.0})
+    s.submit(VM("sp-0", "sp", "", 8, spot=True))
+    s.schedule_pending()
+    assert s.capacity_crunch("region-0", cores_needed=8)["evictions"] == 1
+    # the VM dies for unrelated reasons (churn) before the deadline
+    s.run_until(10.0)
+    s.placer.unplace(s.cluster.vms["sp-0"])
+    s.cluster.kill_vm("sp-0")
+    s.run_until(200.0)
+    # the ladder must not count this as a pipeline kill: no bogus lead time
+    # in the violation/min-lead books, a distinct outcome in the log
+    assert s.evictor.stats.get("kills", 0) == 0
+    assert s.evictor.stats["already_gone"] == 1
+    assert s.evictor.log[0].outcome == "already_gone"
+    assert not s.evictor.log[0].killed
+    assert s.evictor.min_lead_time_s() == float("inf")
+    assert s.evictor.violations() == []
+    notices = [r.value for r in s.gm.bus.poll(H.TOPIC_EVICTIONS, "t", 50)]
+    assert [n["event"] for n in notices] == ["notice", "already_gone"]
+
+
 def test_power_event_routes_evictions_through_pipeline():
     s = make_scheduler(n_servers=1)
     s.gm.register_workload("pre", {

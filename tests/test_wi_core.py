@@ -359,6 +359,51 @@ def test_platform_event_delivery_and_ack():
     assert lm.acked(got[0]["seq"]) == {"vm1"}
 
 
+def test_workload_addressed_event_reaches_only_that_workloads_vms():
+    gm, clk = make_gm()
+    lm = LocalManager("rack0/srv0", gm.bus, clock=clk)
+    gm.register_workload("svc")
+    gm.register_workload("other")
+    ep_a = lm.attach_vm("vm1", "svc")
+    ep_b = lm.attach_vm("vm2", "svc")
+    ep_c = lm.attach_vm("vm3", "other")
+    # resource == "": workload-addressed, fans out to that workload's VMs
+    gm.publish_platform_hint(H.PlatformHint(
+        event=H.PlatformEvent.MAINTENANCE.value, workload="svc",
+        resource="", deadline_s=60.0))
+    assert len(ep_a.scheduled_events()) == 1
+    assert len(ep_b.scheduled_events()) == 1
+    assert ep_c.scheduled_events() == []
+    assert lm.stats["events_delivered"] == 2
+    # an unrelated server-qualified resource matches nobody here
+    gm.publish_platform_hint(H.PlatformHint(
+        event=H.PlatformEvent.MAINTENANCE.value, workload="svc",
+        resource="rack9/srv9/vm1"))
+    assert lm.stats["events_delivered"] == 2
+
+
+def test_ack_event_fans_in_across_vms():
+    gm, clk = make_gm()
+    lm = LocalManager("rack0/srv0", gm.bus, clock=clk)
+    gm.register_workload("svc")
+    eps = [lm.attach_vm(f"vm{i}", "svc") for i in range(3)]
+    gm.publish_platform_hint(H.PlatformHint(
+        event=H.PlatformEvent.MAINTENANCE.value, workload="svc",
+        resource="rack0/srv0", deadline_s=60.0))     # server-wide broadcast
+    seq = eps[0].scheduled_events()[0]["seq"]
+    for ep in eps[:2]:
+        ep.ack_event(seq)
+    assert lm.acked(seq) == {"vm0", "vm1"}           # fan-in, vm2 pending
+    assert lm.stats["events_acked"] == 2
+    # acks are forwarded onto the bus for the platform to react to
+    acks = [r.value for r in gm.bus.poll(H.TOPIC_EVENT_ACKS, "t", 10)]
+    assert [a["vm"] for a in acks] == ["vm0", "vm1"]
+    assert all(a["seq"] == seq and a["event"] == "maintenance"
+               for a in acks)
+    eps[2].ack_event(seq)
+    assert lm.acked(seq) == {"vm0", "vm1", "vm2"}
+
+
 def test_rate_limit_rejects_hint_storm():
     clk = Clock()
     gm = GlobalManager(clock=clk, hint_rate_per_s=1.0, hint_burst=2.0)
