@@ -144,6 +144,50 @@ def f5_savings():
                 f"calibrated={r.saving_calibrated:.3f}(rho={r.rho:.3f})")
 
 
+def e2e_savings():
+    """§6.4 dynamically: a Table-3 fleet through the live scheduler with
+    agents + billing meters recovers the 48.8% saving (±3pp), with zero
+    notice violations and meters that reconcile with cluster core-hours.
+    Sizes honor E2E_SAVINGS_WORKLOADS / E2E_SAVINGS_SERVERS."""
+    from repro.sim.casestudies.e2e_savings import run
+    n_workloads = int(os.environ.get("E2E_SAVINGS_WORKLOADS", 400))
+    n_servers = int(os.environ.get("E2E_SAVINGS_SERVERS", 72))
+    us, r = _timed(lambda: run(seed=0, n_workloads=n_workloads,
+                               n_servers_per_region=n_servers))
+    assert r["abs_err_vs_paper"] <= 0.03, \
+        f"saving {r['saving']:.4f} off paper 0.488 by >3pp"
+    assert r["abs_err_vs_analytic"] <= 0.03, \
+        (f"saving {r['saving']:.4f} off the analytical "
+         f"{r['analytic_calibrated']:.4f} by >3pp")
+    assert r["violations"] == 0, f"{r['violations']} notice violations"
+    assert r["early_releases"] > 0, "no eviction resolved by early release"
+    assert r["reconcile_abs_diff"] <= 1e-6 * max(r["cluster_core_hours"],
+                                                 1.0), \
+        (f"billing meters diverged from cluster core-hours by "
+         f"{r['reconcile_abs_diff']}")
+    JSON_METRICS["e2e_savings"] = {
+        "workloads": n_workloads, "servers_per_region": n_servers,
+        "saving": round(r["saving"], 4),
+        "paper_saving": r["paper_saving"],
+        "analytic_calibrated": round(r["analytic_calibrated"], 4),
+        "abs_err_vs_paper": round(r["abs_err_vs_paper"], 4),
+        "expected_sampled": round(r["expected_sampled"], 4),
+        "core_hours": round(r["core_hours"], 2),
+        "violations": r["violations"],
+        "evictions_killed": r["evictions_killed"],
+        "early_releases": r["early_releases"],
+        "replacements_placed": r["replacements_placed"],
+        "defrag_migrations": r["defrag_migrations"],
+        "reconcile_abs_diff": r["reconcile_abs_diff"],
+    }
+    return us, (f"saving={r['saving']:.3f}(paper=0.488,"
+                f"err={r['abs_err_vs_paper']:.4f}),"
+                f"violations={r['violations']},"
+                f"killed={r['evictions_killed']},"
+                f"early={r['early_releases']},"
+                f"reconcile_diff={r['reconcile_abs_diff']:.2e}")
+
+
 def _sched_scale_run(name, n_servers, cores, n_vms, n_workloads, regions,
                      storm_waves, storm_cores, seed=11):
     """Shared body for the scheduler scale benchmarks: pack ``n_vms`` onto
@@ -333,9 +377,9 @@ def sched_scenarios():
 
 
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
-       s62_microservices, s63_videoconf, f5_savings, sched_scale,
-       sched_scale_xl, sched_scenarios, agents_diurnal, wi_hint_throughput,
-       kernel_flash, roofline_table]
+       s62_microservices, s63_videoconf, f5_savings, e2e_savings,
+       sched_scale, sched_scale_xl, sched_scenarios, agents_diurnal,
+       wi_hint_throughput, kernel_flash, roofline_table]
 
 # sched_scale_xl is opt-in on full runs (it needs ~100k simulated VMs);
 # request it explicitly via --only
@@ -349,6 +393,12 @@ def main() -> None:
                     help="write scheduler-scale metrics (BENCH_sched.json)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else None
+    if names is not None:
+        valid = {fn.__name__ for fn in ALL}
+        unknown = [n for n in names if n not in valid]
+        if unknown:
+            ap.error(f"unknown benchmark name(s) {', '.join(unknown)}; "
+                     f"valid names: {', '.join(sorted(valid))}")
     print("name,us_per_call,derived")
     failed = []
     for fn in ALL:

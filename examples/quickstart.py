@@ -3,8 +3,9 @@
 1. Start a WI global manager (bus + durable store + coordinator).
 2. Register a workload with deployment hints.
 3. A VM publishes runtime hints through its local manager.
-4. An optimization manager (Spot) picks eviction victims from the hints and
-   notifies the workload through the platform-hint channel.
+4. An optimization policy (Spot) picks eviction victims straight off the
+   cluster state + hints and notifies the workload through the
+   platform-hint channel.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,7 +15,7 @@ sys.path.insert(0, "src")
 from repro.core import hints as H
 from repro.core.global_manager import GlobalManager
 from repro.core.local_manager import LocalManager
-from repro.core.optimizations import SpotManager
+from repro.core.optimizations import SpotPolicy
 from repro.sim.cluster import VM, Cluster
 
 
@@ -48,8 +49,8 @@ def main():
     cluster.add_vm(VM("vm-analytics", "batch-analytics", "rack0/srv0", 16,
                       spot=True))
     cluster.add_vm(VM("vm-frontend", "frontend", "rack0/srv0", 16, spot=True))
-    spot = SpotManager(gm)
-    actions = spot.reclaim(cluster.view(), cores_needed=16)
+    spot = SpotPolicy(gm)
+    actions = spot.reclaim_cores(cluster, cores_needed=16)
     print("spot eviction decisions:", [(a.kind, a.vm) for a in actions])
     assert actions[0].vm == "vm-analytics"   # hints drove the choice
     print("aggregated per-rack view:", gm.aggregate("rack"))

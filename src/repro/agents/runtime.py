@@ -167,16 +167,11 @@ class AgentRuntime:
     # -- workload-side actions ----------------------------------------------
     def shed_load(self, agent: WorkloadAgent, new_util_p95: float):
         """Drop a VM's p95 demand.  The cluster books follow through field
-        interception; the admission controller's reservation must be moved
-        by hand (it has no per-VM records), otherwise the later release
-        subtracts the new lower demand and leaks phantom reservation."""
-        vm = agent.vm
-        old = vm.util_p95
-        vm.util_p95 = new_util_p95
-        if vm.alive and vm.server and vm.oversubscribed:
-            adm = self.sched.admission
-            adm.reserved[vm.server] = max(
-                0.0, adm.reserved[vm.server] - vm.cores * (old - new_util_p95))
+        interception; the admission reservation moves with it (through the
+        controller, which otherwise has no per-VM records — without this
+        the later release subtracts the new lower demand and leaks phantom
+        reservation)."""
+        self.sched.admission.set_util_p95(agent.vm, new_util_p95)
 
     def request_replacement(self, agent: WorkloadAgent, event) -> str:
         """Scale-out reaction to an eviction notice: submit a replacement VM

@@ -199,3 +199,13 @@ class GlobalManager:
                    ) -> List[Dict[str, Any]]:
         return [v for _, v in self.store.scan(f"events/{workload}/")
                 if v["seq"] > since_seq]
+
+    # -- teardown ----------------------------------------------------------
+    def close(self):
+        """Release file handles held by the owned store (WAL) and bus
+        (durable segments).  Scenario teardown calls this so long soak
+        runs don't leak descriptors; idempotent."""
+        self.store.close()
+        close_bus = getattr(self.bus, "close", None)
+        if close_bus is not None:
+            close_bus()

@@ -5,6 +5,11 @@ Onboarding an optimization = define (1) managed resource, (2) priority
 (4) pricing, (5) cost model (pricing.PRICING), plus the Table-5 contract:
 which hints it consumes (pull via the store / push via bus subscription) and
 which platform hints it publishes.
+
+Concrete optimizations subclass ``optimizations.policies.OptimizationPolicy``
+(this base + the scheduler-substrate hooks); billing for enabled
+optimizations is metered per VM by ``pricing.BillingMeter`` off the
+scheduler's decision records.
 """
 from __future__ import annotations
 

@@ -1,11 +1,24 @@
 """The ten cloud-platform optimizations (paper §2.2, Tables 2/3/5).
 
-Each manager implements the Table-5 contract against the WI global manager;
-the cluster simulator (repro.sim) drives them against simulated servers and
-the WI-JAX runtime (repro.runtime) drives spot/harvest/autoscale against real
-training jobs.
+``policies`` holds the scheduler-substrate implementations (the
+``OptimizationPolicy`` interface driven by ``repro.sched.Scheduler``'s
+tick/crunch/defrag/power loops against the incremental cluster); the
+``*Manager`` names are thin legacy adapters over the same selection cores
+for callers that still hold a dict-of-dicts view (tests only).
 """
-from repro.core.optimizations.managers import (AutoScalingManager,
+from repro.core.optimizations.policies import (ALL_POLICIES, Action,
+                                               AutoScalingPolicy,
+                                               HarvestPolicy,
+                                               MADatacenterPolicy,
+                                               NonPreprovisionPolicy,
+                                               OptimizationPolicy,
+                                               OverclockingPolicy,
+                                               OversubscriptionPolicy,
+                                               RegionAgnosticPolicy,
+                                               RightsizingPolicy, SpotPolicy,
+                                               UnderclockingPolicy)
+from repro.core.optimizations.managers import (ALL_OPTIMIZATIONS,
+                                               AutoScalingManager,
                                                HarvestManager,
                                                MADatacenterManager,
                                                NonPreprovisionManager,
@@ -14,10 +27,14 @@ from repro.core.optimizations.managers import (AutoScalingManager,
                                                RegionAgnosticManager,
                                                RightsizingManager,
                                                SpotManager,
-                                               UnderclockingManager,
-                                               ALL_OPTIMIZATIONS)
+                                               UnderclockingManager)
 
 __all__ = [
+    "Action", "OptimizationPolicy", "ALL_POLICIES",
+    "AutoScalingPolicy", "HarvestPolicy", "MADatacenterPolicy",
+    "NonPreprovisionPolicy", "OverclockingPolicy", "OversubscriptionPolicy",
+    "RegionAgnosticPolicy", "RightsizingPolicy", "SpotPolicy",
+    "UnderclockingPolicy",
     "AutoScalingManager", "HarvestManager", "MADatacenterManager",
     "NonPreprovisionManager", "OverclockingManager",
     "OversubscriptionManager", "RegionAgnosticManager", "RightsizingManager",

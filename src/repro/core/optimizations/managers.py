@@ -1,356 +1,118 @@
-"""Concrete optimization managers.
+"""Legacy dict-of-dicts "view" adapters over the substrate policies.
 
-State they operate on is a plain dict-of-dicts "cluster view":
-  view = {
-    "vms": {vm_id: {"workload", "server", "cores", "util_p95", "priority_hint",
-                     "spot": bool, "harvest": bool, ...}},
-    "servers": {server_id: {"cores", "free_cores", "power_cap": bool}},
-    "regions": {region: {"price", "carbon_g_kwh"}},
-  }
-The simulator owns the view; managers mutate it only through returned actions
-and platform hints, mirroring the paper's separation (managers never touch
-VMs directly — the platform fabric does).
+The real optimization logic lives in ``policies.py`` and runs against the
+incremental ``Cluster`` through the platform scheduler.  These adapters keep
+the retired view API alive for tests and pre-scheduler callers only: each
+method converts a
+
+  view = {"vms": {...}, "servers": {...}, "regions": {...}}
+
+snapshot into the policy's shared selection core.  No production caller
+builds that view anymore — new code should use the ``*Policy`` classes (or
+the scheduler entry points) directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional
 
-from repro.core import hints as H
-from repro.core.opt_manager import OptimizationManager
-from repro.core.pricing import applicable
+from repro.core.optimizations.policies import (Action, AutoScalingPolicy,
+                                               HarvestPolicy,
+                                               MADatacenterPolicy,
+                                               NonPreprovisionPolicy,
+                                               OverclockingPolicy,
+                                               OversubscriptionPolicy,
+                                               RegionAgnosticPolicy,
+                                               RightsizingPolicy, SpotPolicy,
+                                               UnderclockingPolicy)
+
+__all__ = [
+    "Action", "SpotManager", "HarvestManager", "AutoScalingManager",
+    "OverclockingManager", "UnderclockingManager", "NonPreprovisionManager",
+    "RegionAgnosticManager", "OversubscriptionManager", "RightsizingManager",
+    "MADatacenterManager", "ALL_OPTIMIZATIONS",
+]
 
 
-@dataclass
-class Action:
-    kind: str                   # evict / resize / migrate / throttle / ...
-    vm: str = ""
-    workload: str = ""
-    payload: Dict[str, Any] = field(default_factory=dict)
-
-
-class SpotManager(OptimizationManager):
-    """Table 5: consume deployment preemptible hints + runtime preemption
-    priority; publish runtime preemption notifications."""
-    name = "spot"
-    consumes_deploy = ("preemptibility_pct",)
-    consumes_runtime = ("preemptibility_pct", "x-preemption-priority")
-    publishes = (H.PlatformEvent.EVICTION_NOTICE,)
-
-    def __init__(self, gm, eviction_notice_s: float = 30.0):
-        super().__init__(gm)
-        self.notice_s = eviction_notice_s
-        self.priority_hint: Dict[str, float] = {}   # vm -> priority (low=evict)
-        # drop per-resource priority state when its VM is gone: under churn
-        # the map otherwise grows monotonically with dead-VM keys
-        gm.bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction_record)
-
-    def _on_eviction_record(self, rec):
-        d = rec.value
-        if isinstance(d, dict) and d.get("event") in (
-                "evicted", "early_released", "already_gone"):
-            self.priority_hint.pop(d.get("resource", ""), None)
-
-    def on_runtime_hint(self, d):
-        p = d["hints"].get("x-preemption-priority")
-        if p is not None:
-            self.priority_hint[d["resource"]] = float(p)
-        pre = d["hints"].get("preemptibility_pct")
-        if pre is not None:
-            # high preemptibility => low keep-priority
-            self.priority_hint.setdefault(d["resource"], 100.0 - pre)
-
+class SpotManager(SpotPolicy):
     def reclaim(self, view, cores_needed: float) -> List[Action]:
-        """Pick spot VMs to evict, preferring high-preemptibility ones."""
-        cands = []
-        for vm, info in view["vms"].items():
-            if not info.get("spot"):
-                continue
-            res = f"{info['server']}/{vm}"
-            eff = self.hints_for(info["workload"], res)
-            keep = self.priority_hint.get(res, 100.0 - eff["preemptibility_pct"])
-            cands.append((keep, vm, info))
-        cands.sort()
-        actions = []
-        freed = 0.0
-        for keep, vm, info in cands:
-            if freed >= cores_needed:
-                break
-            res = f"{info['server']}/{vm}"
-            self.gm.checker.note_eviction_pending(res)
-            self.notify(H.PlatformEvent.EVICTION_NOTICE, info["workload"],
-                        res, deadline_s=self.notice_s,
-                        cores=info["cores"], keep_priority=keep)
-            actions.append(Action("evict", vm=vm, workload=info["workload"],
-                                  payload={"after_s": self.notice_s}))
-            freed += info["cores"]
-            self.stats["evictions"] += 1
-        return actions
+        cands = [(vm, i["workload"], i["server"], i["cores"],
+                  bool(i.get("harvest")))
+                 for vm, i in view["vms"].items() if i.get("spot")]
+        return self.select_victims(cands, cores_needed)
 
 
-class HarvestManager(OptimizationManager):
-    """Spot semantics + dynamic grow/shrink of spare cores (Table 5)."""
-    name = "harvest"
-    consumes_deploy = ("preemptibility_pct", "scale_up_down",
-                       "delay_tolerance_ms")
-    consumes_runtime = ("x-scale-priority",)
-    publishes = (H.PlatformEvent.SCALE_UP_OFFER,
-                 H.PlatformEvent.SCALE_DOWN_NOTICE)
-
+class HarvestManager(HarvestPolicy):
     def rebalance(self, view) -> List[Action]:
-        actions = []
+        out: List[Action] = []
         for server, sinfo in view["servers"].items():
-            spare = sinfo["free_cores"]
-            hvms = [(vm, i) for vm, i in view["vms"].items()
+            # legacy offers were uncapped (the view has no apply path)
+            hvms = [(vm, i["workload"], i.get("harvested", 0.0),
+                     float("inf"))
+                    for vm, i in view["vms"].items()
                     if i.get("harvest") and i["server"] == server]
-            if not hvms:
-                continue
-            if spare > 0:
-                per = spare / len(hvms)
-                for vm, info in hvms:
-                    self.notify(H.PlatformEvent.SCALE_UP_OFFER,
-                                info["workload"], f"{server}/{vm}",
-                                extra_cores=per)
-                    actions.append(Action("grow", vm=vm,
-                                          workload=info["workload"],
-                                          payload={"cores": per}))
-                    self.stats["grows"] += 1
-            elif spare < 0:
-                need = -spare
-                for vm, info in sorted(
-                        hvms, key=lambda kv: kv[1].get("harvested", 0.0),
-                        reverse=True):
-                    take = min(info.get("harvested", 0.0), need)
-                    if take <= 0:
-                        continue
-                    self.notify(H.PlatformEvent.SCALE_DOWN_NOTICE,
-                                info["workload"], f"{server}/{vm}",
-                                deadline_s=5.0, cores=take)
-                    actions.append(Action("shrink", vm=vm,
-                                          workload=info["workload"],
-                                          payload={"cores": take}))
-                    self.stats["shrinks"] += 1
-                    need -= take
-                    if need <= 0:
-                        break
-        return actions
+            out.extend(self.rebalance_server(server, sinfo["free_cores"],
+                                             hvms))
+        return out
 
 
-class AutoScalingManager(OptimizationManager):
-    name = "auto_scaling"
-    consumes_deploy = ("scale_out_in", "deploy_time_ms", "delay_tolerance_ms")
-    publishes = ()
-
-    def __init__(self, gm, low: float = 0.25, high: float = 0.6):
-        super().__init__(gm)
-        self.low, self.high = low, high
-
-    def target_replicas(self, workload: str, current: int, util: float,
-                        minimum: int = 1, maximum: int = 1 << 30) -> int:
-        eff = self.hints_for(workload)
-        if not eff["scale_out_in"]:
-            return current
-        if util > self.high:
-            t = min(maximum, current + max(1, int(current * 0.5)))
-        elif util < self.low and current > minimum:
-            t = max(minimum, int(current * util / self.low) or minimum)
-        else:
-            t = current
-        if t != current:
-            self.stats["rescale"] += 1
-        return t
+class AutoScalingManager(AutoScalingPolicy):
+    pass
 
 
-class OverclockingManager(OptimizationManager):
-    name = "overclocking"
-    consumes_deploy = ("scale_up_down", "delay_tolerance_ms")
-    consumes_runtime = ("x-scale-priority",)
-    publishes = (H.PlatformEvent.OVERCLOCK_OFFER,)
-    UTIL_P95_MIN = 0.40
-
+class OverclockingManager(OverclockingPolicy):
     def offers(self, view, coordinator=None) -> List[Action]:
         acts = []
         for vm, info in view["vms"].items():
-            eff = self.hints_for(info["workload"], f"{info['server']}/{vm}")
-            if not applicable(self.name, eff):
-                continue
-            if info.get("util_p95", 0.0) <= self.UTIL_P95_MIN:
-                continue
-            res = f"{info['server']}/cpu_freq"
-            if coordinator is not None:
-                g = coordinator.submit([self.claim(info["workload"], res,
-                                                   amount=0.2,
-                                                   compressible=True)])
-                if not g or g[0].amount <= 0:
-                    self.stats["denied_by_coordination"] += 1
-                    continue
-                boost = g[0].amount
-            else:
-                boost = 0.2
-            self.notify(H.PlatformEvent.OVERCLOCK_OFFER, info["workload"],
-                        f"{info['server']}/{vm}", boost_frac=boost)
-            acts.append(Action("overclock", vm=vm, workload=info["workload"],
-                               payload={"boost_frac": boost}))
-            self.stats["overclocks"] += 1
+            a = self._maybe_offer(info["workload"], info["server"], vm,
+                                  info.get("util_p95", 0.0), coordinator)
+            if a is not None:
+                acts.append(a)
         return acts
 
 
-class UnderclockingManager(OptimizationManager):
-    name = "underclocking"
-    consumes_deploy = ("scale_up_down", "delay_tolerance_ms")
-    publishes = (H.PlatformEvent.UNDERCLOCK_NOTICE,)
-    UTIL_P95_MAX = 0.20
-
+class UnderclockingManager(UnderclockingPolicy):
     def apply(self, view, coordinator=None) -> List[Action]:
         acts = []
         for vm, info in view["vms"].items():
-            eff = self.hints_for(info["workload"], f"{info['server']}/{vm}")
-            if not applicable(self.name, eff):
-                continue
-            if info.get("util_p95", 1.0) >= self.UTIL_P95_MAX:
-                continue
-            res = f"{info['server']}/cpu_freq"
-            if coordinator is not None:
-                g = coordinator.submit([self.claim(info["workload"], res,
-                                                   amount=0.2,
-                                                   compressible=True)])
-                if not g or g[0].amount <= 0:
-                    self.stats["denied_by_coordination"] += 1
-                    continue
-            self.notify(H.PlatformEvent.UNDERCLOCK_NOTICE, info["workload"],
-                        f"{info['server']}/{vm}", slowdown_frac=0.2)
-            acts.append(Action("underclock", vm=vm, workload=info["workload"],
-                               payload={"slowdown_frac": 0.2}))
-            self.stats["underclocks"] += 1
+            a = self._maybe_underclock(info["workload"], info["server"], vm,
+                                       info.get("util_p95", 1.0), coordinator)
+            if a is not None:
+                acts.append(a)
         return acts
 
 
-class NonPreprovisionManager(OptimizationManager):
-    name = "non_preprovision"
-    consumes_deploy = ("deploy_time_ms",)
-    publishes = (H.PlatformEvent.PREPROVISION_STATUS,)
-
-    def should_preprovision(self, workload: str) -> bool:
-        eff = self.hints_for(workload)
-        pre = not applicable(self.name, eff)
-        self.stats["preprovisioned" if pre else "skipped"] += 1
-        return pre
+class NonPreprovisionManager(NonPreprovisionPolicy):
+    pass
 
 
-class RegionAgnosticManager(OptimizationManager):
-    name = "region_agnostic"
-    consumes_deploy = ("region_independent",)
-    publishes = (H.PlatformEvent.MIGRATION_NOTICE,)
-
-    def best_region(self, view, objective: str = "price") -> str:
-        regs = view["regions"]
-        key = (lambda r: regs[r]["price"]) if objective == "price" else \
-            (lambda r: regs[r]["carbon_g_kwh"])
-        return min(regs, key=key)
-
-    def place(self, view, workload: str, default_region: str,
-              objective: str = "price") -> str:
-        eff = self.hints_for(workload)
-        if not applicable(self.name, eff):
-            return default_region
-        best = self.best_region(view, objective)
-        if best != default_region:
-            self.notify(H.PlatformEvent.MIGRATION_NOTICE, workload, "*",
-                        to_region=best, objective=objective)
-            self.stats["migrations"] += 1
-        return best
+class RegionAgnosticManager(RegionAgnosticPolicy):
+    pass
 
 
-class OversubscriptionManager(OptimizationManager):
-    name = "oversubscription"
-    consumes_deploy = ("scale_up_down", "delay_tolerance_ms")
-    consumes_runtime = ("x-scale-priority",)
-    publishes = (H.PlatformEvent.THROTTLE_NOTICE,)
-    UTIL_P95_MAX = 0.65
-
-    def eligible(self, workload: str, util_p95: float) -> bool:
-        eff = self.hints_for(workload)
-        ok = applicable(self.name, eff) and util_p95 < self.UTIL_P95_MAX
-        if ok:
-            self.stats["eligible"] += 1
-        return ok
-
+class OversubscriptionManager(OversubscriptionPolicy):
     def resolve_pressure(self, view, server: str) -> List[Action]:
-        """All VMs spiked at once: throttle the least critical (§2.2)."""
-        vms = [(vm, i) for vm, i in view["vms"].items()
-               if i["server"] == server and i.get("oversubscribed")]
-        vms.sort(key=lambda kv: kv[1].get("util_p95", 0.0))
-        acts = []
-        for vm, info in vms[: max(1, len(vms) // 2)]:
-            self.notify(H.PlatformEvent.THROTTLE_NOTICE, info["workload"],
-                        f"{server}/{vm}", frac=0.5)
-            acts.append(Action("throttle", vm=vm, workload=info["workload"],
-                               payload={"frac": 0.5}))
-            self.stats["throttles"] += 1
-        return acts
+        entries = [(i.get("util_p95", 0.0), vm, i["workload"])
+                   for vm, i in view["vms"].items()
+                   if i["server"] == server and i.get("oversubscribed")]
+        return self.throttle_least_critical(server, entries)
 
 
-class RightsizingManager(OptimizationManager):
-    name = "rightsizing"
-    consumes_deploy = ("scale_up_down", "delay_tolerance_ms",
-                       "availability_nines")
-    publishes = (H.PlatformEvent.RIGHTSIZE_RECOMMENDATION,)
-
-    def recommend(self, workload: str, vm: str, util_p95: float,
-                  cores: float) -> Optional[float]:
-        eff = self.hints_for(workload)
-        if not applicable(self.name, eff):
-            return None
-        if util_p95 < 0.5:
-            new = max(1.0, cores / 2)
-        elif util_p95 > 0.9:
-            new = cores * 2
-        else:
-            return None
-        self.notify(H.PlatformEvent.RIGHTSIZE_RECOMMENDATION, workload, vm,
-                    new_cores=new, old_cores=cores)
-        self.stats["recommendations"] += 1
-        return new
+class RightsizingManager(RightsizingPolicy):
+    pass
 
 
-class MADatacenterManager(OptimizationManager):
-    name = "ma_datacenters"
-    consumes_deploy = ("availability_nines", "preemptibility_pct",
-                       "scale_up_down")
-    publishes = (H.PlatformEvent.THROTTLE_NOTICE,
-                 H.PlatformEvent.EVICTION_NOTICE)
-
-    def power_event(self, view, server: str, shed_frac: float) -> List[Action]:
-        """Infrastructure event: shed `shed_frac` of the server's power by
-        throttling low-availability VMs first, then evicting (§2.2 MA DCs)."""
-        vms = []
+class MADatacenterManager(MADatacenterPolicy):
+    def power_event(self, view, server: str, shed_frac: float
+                    ) -> List[Action]:
+        entries = []
         for vm, info in view["vms"].items():
             if info["server"] != server:
                 continue
             eff = self.hints_for(info["workload"], f"{server}/{vm}")
-            vms.append((eff["availability_nines"], vm, info, eff))
-        vms.sort()          # lowest availability requirement first
-        acts = []
+            entries.append((eff["availability_nines"], vm, info["workload"],
+                            info["cores"], eff))
         need = shed_frac * view["servers"][server]["cores"]
-        for nines, vm, info, eff in vms:
-            if need <= 0:
-                break
-            if nines <= 3.0:
-                self.notify(H.PlatformEvent.THROTTLE_NOTICE, info["workload"],
-                            f"{server}/{vm}", frac=0.5, cause="power_event")
-                acts.append(Action("throttle", vm=vm,
-                                   workload=info["workload"],
-                                   payload={"frac": 0.5}))
-                need -= info["cores"] * 0.5
-                self.stats["throttles"] += 1
-            elif eff["preemptibility_pct"] >= 20.0:
-                self.notify(H.PlatformEvent.EVICTION_NOTICE, info["workload"],
-                            f"{server}/{vm}", deadline_s=10.0,
-                            cause="power_event")
-                acts.append(Action("evict", vm=vm, workload=info["workload"]))
-                need -= info["cores"]
-                self.stats["evictions"] += 1
-        return acts
+        return self.shed(server, need, entries)
 
 
 ALL_OPTIMIZATIONS = (SpotManager, HarvestManager, AutoScalingManager,

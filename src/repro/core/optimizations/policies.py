@@ -1,0 +1,745 @@
+"""The ten Table-2 optimizations as scheduler-substrate policies.
+
+``OptimizationPolicy`` is the unified interface the platform scheduler
+(``repro.sched.Scheduler``) drives: each policy consumes deployment/runtime
+hints from the store (via the global manager), reads cluster state straight
+off the incremental ``Cluster`` (per-server vm indices, O(1) counters —
+never a materialized world copy), and proposes actions through the existing
+machinery:
+
+  * spot + harvest reclaim flow through the ``EvictionPipeline`` (notice
+    windows honored, Table-4 priority tiers order the victims: harvest
+    before spot);
+  * rightsizing and auto-scaling produce *resize* decisions enacted through
+    ``AdmissionController.resize`` / the pending queue;
+  * region-agnostic placement is enacted continuously by the ``Placer``
+    and the scheduler's defrag-migration loop;
+  * oversubscription packs against p95 headroom at admission and resolves
+    correlated demand spikes by throttling the least critical VMs;
+  * under/overclocking and MA-datacenters react to utilization and power
+    events with offers/notices on the platform-hint channel.
+
+Policies are bound to a scheduler with ``bind``; the scheduler calls
+``on_tick`` periodically plus the event-driven hooks (``reclaim_cores``,
+``power_event_cluster``).  Unbound policies still work standalone against a
+bare ``Cluster`` (examples, tests).
+
+The legacy dict-of-dicts "view" managers in ``managers.py`` are thin
+adapters over the shared selection cores below — kept only for tests and
+pre-scheduler callers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core import hints as H
+from repro.core.opt_manager import OptimizationManager
+from repro.core.pricing import PRIORITY, applicable
+
+
+@dataclass
+class Action:
+    kind: str                   # evict / resize / migrate / throttle / ...
+    vm: str = ""
+    workload: str = ""
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+
+class OptimizationPolicy(OptimizationManager):
+    """Base: an optimization manager that runs on the scheduler substrate.
+
+    Subclasses override ``on_tick`` (periodic scans bounded by the
+    scheduler's policy period) and/or provide event-driven entry points the
+    scheduler routes (capacity crunch -> ``SpotPolicy.reclaim_cores``,
+    power events -> ``MADatacenterPolicy.power_event_cluster``).
+    """
+
+    def __init__(self, gm, **kw):
+        super().__init__(gm, **kw)
+        self.sched = None           # set by bind()
+
+    def bind(self, sched) -> "OptimizationPolicy":
+        self.sched = sched
+        return self
+
+    def on_tick(self, now: float) -> List[Action]:
+        """Periodic hook, driven from ``Scheduler.run_policies``."""
+        return []
+
+    # -- helpers over the incremental cluster -------------------------------
+    @staticmethod
+    def _alive_placed(cluster) -> Iterable:
+        """Alive placed VMs in deterministic (vm_id) order."""
+        for vid in sorted(cluster.vms):
+            v = cluster.vms[vid]
+            if v.alive and v.server:
+                yield v
+
+    @staticmethod
+    def _vms_on(cluster, server: str) -> List:
+        return [cluster.vms[vid] for vid in sorted(cluster.vm_ids_on(server))]
+
+
+class SpotPolicy(OptimizationPolicy):
+    """Table 5: consume deployment preemptible hints + runtime preemption
+    priority; pick eviction victims for the pipeline (Table-4 tiers:
+    harvest VMs are reclaimed before plain spot)."""
+    name = "spot"
+    consumes_deploy = ("preemptibility_pct",)
+    consumes_runtime = ("preemptibility_pct", "x-preemption-priority")
+    publishes = (H.PlatformEvent.EVICTION_NOTICE,)
+
+    def __init__(self, gm, eviction_notice_s: float = 30.0):
+        super().__init__(gm)
+        self.notice_s = eviction_notice_s
+        self.priority_hint: Dict[str, float] = {}   # resource -> keep prio
+        # drop per-resource priority state when its VM is gone: under churn
+        # the map otherwise grows monotonically with dead-VM keys
+        gm.bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction_record)
+
+    def _on_eviction_record(self, rec):
+        d = rec.value
+        if isinstance(d, dict) and d.get("event") in (
+                "evicted", "early_released", "already_gone"):
+            self.priority_hint.pop(d.get("resource", ""), None)
+
+    def on_runtime_hint(self, d):
+        p = d["hints"].get("x-preemption-priority")
+        if p is not None:
+            self.priority_hint[d["resource"]] = float(p)
+        pre = d["hints"].get("preemptibility_pct")
+        if pre is not None:
+            # high preemptibility => low keep-priority
+            self.priority_hint.setdefault(d["resource"], 100.0 - pre)
+
+    def keep_priority(self, workload: str, resource: str) -> float:
+        p = self.priority_hint.get(resource)
+        if p is not None:
+            return p
+        eff = self.hints_for(workload, resource)
+        return 100.0 - eff["preemptibility_pct"]
+
+    def select_victims(self, cands: Iterable[Tuple[str, str, str, float,
+                                                   bool]],
+                       cores_needed: float) -> List[Action]:
+        """Shared selection core.  ``cands`` rows are (vm_id, workload,
+        server, cores, is_harvest); victims are taken in Table-4 priority
+        order (harvest tier reclaims before spot) then by keep-priority."""
+        scored = []
+        for vm_id, workload, server, cores, harvest in cands:
+            res = f"{server}/{vm_id}"
+            tier = PRIORITY["harvest"] if harvest else PRIORITY["spot"]
+            scored.append((-tier, self.keep_priority(workload, res),
+                           vm_id, workload, res, cores))
+        scored.sort()
+        actions: List[Action] = []
+        freed = 0.0
+        for _tier, keep, vm_id, workload, res, cores in scored:
+            if freed >= cores_needed:
+                break
+            self.gm.checker.note_eviction_pending(res)
+            self.notify(H.PlatformEvent.EVICTION_NOTICE, workload, res,
+                        deadline_s=self.notice_s, cores=cores,
+                        keep_priority=keep)
+            actions.append(Action("evict", vm=vm_id, workload=workload,
+                                  payload={"after_s": self.notice_s}))
+            freed += cores
+            self.stats["evictions"] += 1
+        return actions
+
+    def reclaim_cores(self, cluster, cores_needed: float,
+                      region: Optional[str] = None,
+                      exclude=frozenset()) -> List[Action]:
+        """Pick spot/harvest VMs to evict straight off the cluster indices
+        (O(region VMs)); ``exclude`` skips VMs already mid-eviction."""
+        if region is None:
+            it = self._alive_placed(cluster)
+        else:
+            it = (cluster.vms[vid]
+                  for sid in cluster.servers_in_region(region)
+                  for vid in sorted(cluster.vm_ids_on(sid)))
+        cands = [(v.vm_id, v.workload, v.server, v.cores, v.harvest)
+                 for v in it if v.spot and v.vm_id not in exclude]
+        return self.select_victims(cands, cores_needed)
+
+
+class HarvestPolicy(OptimizationPolicy):
+    """Spot semantics + dynamic grow/shrink of spare cores (Table 5)."""
+    name = "harvest"
+    consumes_deploy = ("preemptibility_pct", "scale_up_down",
+                       "delay_tolerance_ms")
+    consumes_runtime = ("x-scale-priority",)
+    publishes = (H.PlatformEvent.SCALE_UP_OFFER,
+                 H.PlatformEvent.SCALE_DOWN_NOTICE)
+
+    def rebalance_server(self, server: str, spare: float,
+                         hvms: Sequence[Tuple[str, str, float, float]]
+                         ) -> List[Action]:
+        """Shared core: grow/shrink actions for one server.  ``hvms`` rows
+        are (vm_id, workload, harvested, grow_cap); the advertised offer is
+        the *granted* amount (fair spare share clipped to the VM's
+        remaining grow cap), so workloads never scale for capacity they
+        will not receive."""
+        actions: List[Action] = []
+        if not hvms:
+            return actions
+        if spare > 0:
+            per = spare / len(hvms)
+            for vm_id, workload, _h, cap in hvms:
+                grant = min(per, cap)
+                if grant <= 0:
+                    continue
+                self.notify(H.PlatformEvent.SCALE_UP_OFFER, workload,
+                            f"{server}/{vm_id}", extra_cores=grant)
+                actions.append(Action("grow", vm=vm_id, workload=workload,
+                                      payload={"cores": grant}))
+                self.stats["grows"] += 1
+        elif spare < 0:
+            need = -spare
+            for vm_id, workload, harvested, _cap in sorted(
+                    hvms, key=lambda r: (-r[2], r[0])):
+                take = min(harvested, need)
+                if take <= 0:
+                    continue
+                self.notify(H.PlatformEvent.SCALE_DOWN_NOTICE, workload,
+                            f"{server}/{vm_id}", deadline_s=5.0, cores=take)
+                actions.append(Action("shrink", vm=vm_id, workload=workload,
+                                      payload={"cores": take}))
+                self.stats["shrinks"] += 1
+                need -= take
+                if need <= 0:
+                    break
+        return actions
+
+    GROW_CAP_FRAC = 0.5     # harvested spare capped vs nominal cores
+
+    def rebalance_cluster(self, cluster, admission=None,
+                          apply: bool = False) -> List[Action]:
+        """Walk servers off the incremental counters; with ``apply`` the
+        grow/shrink is enacted (``harvested`` moves through the cluster's
+        field interception, and the admission reservation follows so a
+        later release does not leak phantom capacity).  Growth is capped at
+        ``GROW_CAP_FRAC`` of the VM's nominal cores — the cap is applied
+        *before* the offer goes out, so a mostly empty server cannot
+        promise one harvest VM a whole host."""
+        out: List[Action] = []
+        for sid in cluster.servers:
+            spare = cluster.free_cores(sid)
+            if spare == 0:
+                continue
+            hvms = [(v.vm_id, v.workload, v.harvested,
+                     max(0.0, self.GROW_CAP_FRAC * v.cores - v.harvested))
+                    for v in self._vms_on(cluster, sid) if v.harvest]
+            acts = self.rebalance_server(sid, spare, hvms)
+            if apply:
+                for a in acts:
+                    vm = cluster.vms[a.vm]
+                    delta = (a.payload["cores"] if a.kind == "grow"
+                             else -a.payload["cores"])
+                    vm.harvested = max(0.0, vm.harvested + delta)
+                    if admission is not None and not vm.oversubscribed:
+                        admission.shift_demand(sid, delta)
+            out.extend(acts)
+        return out
+
+    def on_tick(self, now: float) -> List[Action]:
+        if self.sched is None:
+            return []
+        acts = self.rebalance_cluster(self.sched.cluster,
+                                      self.sched.admission, apply=True)
+        self.sched.note_policy_actions(self.name, acts)
+        return acts
+
+
+class AutoScalingPolicy(OptimizationPolicy):
+    name = "auto_scaling"
+    consumes_deploy = ("scale_out_in", "deploy_time_ms", "delay_tolerance_ms")
+    publishes = ()
+
+    def __init__(self, gm, low: float = 0.25, high: float = 0.6):
+        super().__init__(gm)
+        self.low, self.high = low, high
+        self._clone_seq = 0
+        # clone vm_id -> (workload, demand share, passes queued, VM object).
+        # The object reference matters: a VM sitting in the pending queue
+        # is not registered with the cluster yet, so an id lookup cannot
+        # distinguish "still queued" from "gone".
+        self._pending_clones: Dict[str, Tuple[str, float, int, Any]] = {}
+        # workload -> remaining passes to hold off scale-out after a clone
+        # failed to place (the cluster was full; retrying every pass would
+        # just churn the pending queue)
+        self._scale_out_backoff: Dict[str, int] = {}
+
+    def target_replicas(self, workload: str, current: int, util: float,
+                        minimum: int = 1, maximum: int = 1 << 30) -> int:
+        eff = self.hints_for(workload)
+        if not eff["scale_out_in"]:
+            return current
+        if util > self.high:
+            t = min(maximum, current + max(1, int(current * 0.5)))
+        elif util < self.low and current > minimum:
+            t = max(minimum, int(current * util / self.low) or minimum)
+        else:
+            t = current
+        if t != current:
+            self.stats["rescale"] += 1
+        return t
+
+    @staticmethod
+    def _spread_demand(sched, vms, new_util: float):
+        """Demand conservation on a rescale: the workload's total demand is
+        fixed, so per-replica p95 utilization moves with the replica count
+        (books follow through ``AdmissionController.set_util_p95``)."""
+        for v in vms:
+            sched.admission.set_util_p95(v, new_util)
+
+    MAX_CLONE_WAIT_PASSES = 3
+    FAILED_CLONE_BACKOFF_PASSES = 4
+
+    def _settle_clones(self, sched, by_w: Dict[str, List]) -> set:
+        """Reconcile clones from earlier passes.  A clone that landed has
+        its demand share for real; one still queued holds its workload
+        steady (no rescale this pass); one that died unplaced — or queued
+        past ``MAX_CLONE_WAIT_PASSES`` (the cluster cannot take it) — gets
+        its share restored onto the live replicas, so the workload's total
+        demand never silently evaporates."""
+        waiting = set()
+        for cid, (w, share, passes, vm) in \
+                list(self._pending_clones.items()):
+            if vm.alive and vm.server:
+                del self._pending_clones[cid]       # landed
+                continue
+            if vm.alive and passes < self.MAX_CLONE_WAIT_PASSES:
+                self._pending_clones[cid] = (w, share, passes + 1, vm)
+                waiting.add(w)
+                continue
+            # never placed: give up (mark it dead so the pending-queue
+            # drain discards it, and back off further scale-outs) and put
+            # its demand share back on the live replicas
+            del self._pending_clones[cid]
+            if vm.alive:
+                vm.alive = False
+                self.stats["clones_unplaceable"] += 1
+                self._scale_out_backoff[w] = self.FAILED_CLONE_BACKOFF_PASSES
+            vms = by_w.get(w)
+            if vms:
+                total = sum(v.cores for v in vms)
+                cur = sum(v.util_p95 * v.cores for v in vms)
+                self._spread_demand(sched, vms,
+                                    min(0.95, (cur + share) / total))
+        return waiting
+
+    def scan(self, sched, max_changes: int = 32,
+             vms: Optional[Sequence] = None) -> List[Action]:
+        """Per-workload scale-out/in against live cluster utilization:
+        scale-out submits clone VMs into the pending queue; scale-in drains
+        the emptiest replicas through the eviction pipeline (a *consented*
+        shrink still pays the hinted notice window).  Total demand per
+        workload is conserved — per-replica utilization drops/rises as the
+        replica count changes (and a clone that never places gives its
+        share back via ``_settle_clones``), so the controller settles
+        instead of compounding."""
+        cluster = sched.cluster
+        # VMs already mid-eviction are leaving: they neither count as
+        # replicas nor receive redistributed demand (their raised share
+        # would die with them at the deadline)
+        mid_eviction = sched.evictor.tickets
+        by_w: Dict[str, List] = {}
+        for v in (vms if vms is not None else self._alive_placed(cluster)):
+            if v.alive and v.server and v.vm_id not in mid_eviction:
+                by_w.setdefault(v.workload, []).append(v)
+        waiting = self._settle_clones(sched, by_w)
+        actions: List[Action] = []
+        changes = 0
+        for w in sorted(by_w):
+            if changes >= max_changes:
+                break
+            if w in waiting:
+                continue
+            if not applicable(self.name, self.hints_for(w)):
+                continue
+            vms_w = by_w[w]
+            total = sum(v.cores for v in vms_w)
+            util = sum(v.util_p95 * v.cores for v in vms_w) / total
+            tgt = self.target_replicas(w, len(vms_w), util)
+            if tgt > len(vms_w):
+                backoff = self._scale_out_backoff.get(w, 0)
+                if backoff > 0:         # a recent clone could not place
+                    self._scale_out_backoff[w] = backoff - 1
+                    continue
+                n_new = min(tgt - len(vms_w), max_changes - changes)
+                new_util = min(0.95, util * len(vms_w) / (len(vms_w) + n_new))
+                proto = min(vms_w, key=lambda v: (v.cores, v.vm_id))
+                self._spread_demand(sched, vms_w, new_util)
+                for _ in range(n_new):
+                    self._clone_seq += 1
+                    from repro.sim.cluster import VM
+                    clone = VM(f"{w}.as{self._clone_seq}", w, "",
+                               proto.cores, util_p95=new_util,
+                               spot=proto.spot, harvest=proto.harvest)
+                    sched.submit(clone)
+                    self._pending_clones[clone.vm_id] = (
+                        w, proto.cores * new_util, 0, clone)
+                    actions.append(Action("scale_out", vm=clone.vm_id,
+                                          workload=w,
+                                          payload={"cores": proto.cores}))
+                    changes += 1
+            elif tgt < len(vms_w):
+                n_drop = min(len(vms_w) - tgt, max_changes - changes)
+                surplus = sorted(vms_w, key=lambda v: (v.util_p95, v.vm_id))
+                evicts = [Action("evict", vm=v.vm_id, workload=w,
+                                 payload={"after_s": 0.0})
+                          for v in surplus[:n_drop]]
+                keep = surplus[n_drop:]
+                if keep:
+                    new_util = min(0.95, util * len(vms_w) / len(keep))
+                    self._spread_demand(sched, keep, new_util)
+                sched.evictor.submit(evicts, source=self.name)
+                actions.extend(evicts)
+                changes += len(evicts)
+        return actions
+
+    def on_tick(self, now: float) -> List[Action]:
+        if self.sched is None:
+            return []
+        acts = self.scan(self.sched, vms=self.sched.alive_placed_vms())
+        self.sched.note_policy_actions(self.name, acts)
+        return acts
+
+
+class OverclockingPolicy(OptimizationPolicy):
+    name = "overclocking"
+    consumes_deploy = ("scale_up_down", "delay_tolerance_ms")
+    consumes_runtime = ("x-scale-priority",)
+    publishes = (H.PlatformEvent.OVERCLOCK_OFFER,)
+    UTIL_P95_MIN = 0.40
+
+    def _maybe_offer(self, workload: str, server: str, vm_id: str,
+                     util_p95: float, coordinator=None) -> Optional[Action]:
+        eff = self.hints_for(workload, f"{server}/{vm_id}")
+        if not applicable(self.name, eff):
+            return None
+        if util_p95 <= self.UTIL_P95_MIN:
+            return None
+        if coordinator is not None:
+            g = coordinator.submit([self.claim(workload,
+                                               f"{server}/cpu_freq",
+                                               amount=0.2,
+                                               compressible=True)])
+            if not g or g[0].amount <= 0:
+                self.stats["denied_by_coordination"] += 1
+                return None
+            boost = g[0].amount
+        else:
+            boost = 0.2
+        self.notify(H.PlatformEvent.OVERCLOCK_OFFER, workload,
+                    f"{server}/{vm_id}", boost_frac=boost)
+        self.stats["overclocks"] += 1
+        return Action("overclock", vm=vm_id, workload=workload,
+                      payload={"boost_frac": boost})
+
+    def offers_cluster(self, cluster, coordinator=None,
+                       vms: Optional[Sequence] = None) -> List[Action]:
+        acts = []
+        for v in (vms if vms is not None else self._alive_placed(cluster)):
+            if not v.alive or not v.server:
+                continue
+            a = self._maybe_offer(v.workload, v.server, v.vm_id, v.util_p95,
+                                  coordinator)
+            if a is not None:
+                acts.append(a)
+        return acts
+
+    def on_tick(self, now: float) -> List[Action]:
+        if self.sched is None:
+            return []
+        acts = self.offers_cluster(self.sched.cluster, self.gm.coordinator,
+                                   vms=self.sched.alive_placed_vms())
+        self.sched.note_policy_actions(self.name, acts)
+        return acts
+
+
+class UnderclockingPolicy(OptimizationPolicy):
+    name = "underclocking"
+    consumes_deploy = ("scale_up_down", "delay_tolerance_ms")
+    publishes = (H.PlatformEvent.UNDERCLOCK_NOTICE,)
+    UTIL_P95_MAX = 0.20
+
+    def _maybe_underclock(self, workload: str, server: str, vm_id: str,
+                          util_p95: float, coordinator=None
+                          ) -> Optional[Action]:
+        eff = self.hints_for(workload, f"{server}/{vm_id}")
+        if not applicable(self.name, eff):
+            return None
+        if util_p95 >= self.UTIL_P95_MAX:
+            return None
+        if coordinator is not None:
+            g = coordinator.submit([self.claim(workload,
+                                               f"{server}/cpu_freq",
+                                               amount=0.2,
+                                               compressible=True)])
+            if not g or g[0].amount <= 0:
+                self.stats["denied_by_coordination"] += 1
+                return None
+        self.notify(H.PlatformEvent.UNDERCLOCK_NOTICE, workload,
+                    f"{server}/{vm_id}", slowdown_frac=0.2)
+        self.stats["underclocks"] += 1
+        return Action("underclock", vm=vm_id, workload=workload,
+                      payload={"slowdown_frac": 0.2})
+
+    def apply_cluster(self, cluster, coordinator=None,
+                      vms: Optional[Sequence] = None) -> List[Action]:
+        acts = []
+        for v in (vms if vms is not None else self._alive_placed(cluster)):
+            if not v.alive or not v.server:
+                continue
+            a = self._maybe_underclock(v.workload, v.server, v.vm_id,
+                                       v.util_p95, coordinator)
+            if a is not None:
+                acts.append(a)
+        return acts
+
+    def on_tick(self, now: float) -> List[Action]:
+        if self.sched is None:
+            return []
+        acts = self.apply_cluster(self.sched.cluster, self.gm.coordinator,
+                                  vms=self.sched.alive_placed_vms())
+        self.sched.note_policy_actions(self.name, acts)
+        return acts
+
+
+class NonPreprovisionPolicy(OptimizationPolicy):
+    name = "non_preprovision"
+    consumes_deploy = ("deploy_time_ms",)
+    publishes = (H.PlatformEvent.PREPROVISION_STATUS,)
+
+    def should_preprovision(self, workload: str) -> bool:
+        eff = self.hints_for(workload)
+        pre = not applicable(self.name, eff)
+        self.stats["preprovisioned" if pre else "skipped"] += 1
+        return pre
+
+
+class RegionAgnosticPolicy(OptimizationPolicy):
+    name = "region_agnostic"
+    consumes_deploy = ("region_independent",)
+    publishes = (H.PlatformEvent.MIGRATION_NOTICE,)
+
+    @staticmethod
+    def _regions_of(world) -> Dict[str, Any]:
+        """Accept a ``Cluster``, a regions mapping, or (legacy) a view."""
+        regions = getattr(world, "regions", world)
+        if isinstance(regions, dict) and "regions" in regions \
+                and "vms" in regions:
+            regions = regions["regions"]        # legacy dict-of-dicts view
+        return regions
+
+    @staticmethod
+    def _metric(region, objective: str) -> float:
+        if isinstance(region, dict):
+            return region["price" if objective == "price" else "carbon_g_kwh"]
+        return region.price if objective == "price" else region.carbon_g_kwh
+
+    def best_region(self, world, objective: str = "price") -> str:
+        regs = self._regions_of(world)
+        return min(regs, key=lambda r: self._metric(regs[r], objective))
+
+    def place(self, world, workload: str, default_region: str,
+              objective: str = "price") -> str:
+        eff = self.hints_for(workload)
+        if not applicable(self.name, eff):
+            return default_region
+        best = self.best_region(world, objective)
+        if best != default_region:
+            self.notify(H.PlatformEvent.MIGRATION_NOTICE, workload, "*",
+                        to_region=best, objective=objective)
+            self.stats["migrations"] += 1
+        return best
+
+
+class OversubscriptionPolicy(OptimizationPolicy):
+    name = "oversubscription"
+    consumes_deploy = ("scale_up_down", "delay_tolerance_ms")
+    consumes_runtime = ("x-scale-priority",)
+    publishes = (H.PlatformEvent.THROTTLE_NOTICE,)
+    UTIL_P95_MAX = 0.65
+
+    def eligible(self, workload: str, util_p95: float) -> bool:
+        eff = self.hints_for(workload)
+        ok = applicable(self.name, eff) and util_p95 < self.UTIL_P95_MAX
+        if ok:
+            self.stats["eligible"] += 1
+        return ok
+
+    def throttle_least_critical(self, server: str,
+                                entries: Sequence[Tuple[float, str, str]]
+                                ) -> List[Action]:
+        """Shared core: all VMs spiked at once — throttle the least
+        critical half (§2.2).  ``entries`` rows are (util_p95, vm_id,
+        workload)."""
+        if not entries:
+            return []
+        ordered = sorted(entries, key=lambda r: (r[0], r[1]))
+        acts = []
+        for util, vm_id, workload in ordered[: max(1, len(ordered) // 2)]:
+            self.notify(H.PlatformEvent.THROTTLE_NOTICE, workload,
+                        f"{server}/{vm_id}", frac=0.5)
+            acts.append(Action("throttle", vm=vm_id, workload=workload,
+                               payload={"frac": 0.5}))
+            self.stats["throttles"] += 1
+        return acts
+
+    def resolve_pressure_cluster(self, cluster, server: str) -> List[Action]:
+        entries = [(v.util_p95, v.vm_id, v.workload)
+                   for v in self._vms_on(cluster, server)
+                   if v.oversubscribed]
+        return self.throttle_least_critical(server, entries)
+
+    def on_tick(self, now: float) -> List[Action]:
+        """Correlated-spike watch: any server whose p95 demand exceeds its
+        physical cores gets its oversubscribed VMs throttled."""
+        if self.sched is None:
+            return []
+        cluster = self.sched.cluster
+        acts: List[Action] = []
+        for sid, srv in cluster.servers.items():
+            if cluster.p95_used(sid) > srv.cores + 1e-9:
+                acts.extend(self.resolve_pressure_cluster(cluster, sid))
+        self.sched.note_policy_actions(self.name, acts)
+        return acts
+
+
+class RightsizingPolicy(OptimizationPolicy):
+    name = "rightsizing"
+    consumes_deploy = ("scale_up_down", "delay_tolerance_ms",
+                       "availability_nines")
+    publishes = (H.PlatformEvent.RIGHTSIZE_RECOMMENDATION,)
+    # applied shrinks must leave post-resize utilization at or below this
+    # (the grow trigger), or grow/shrink would oscillate every pass
+    SHRINK_UTIL_CAP = 0.9
+
+    def recommend(self, workload: str, vm: str, util_p95: float,
+                  cores: float) -> Optional[float]:
+        eff = self.hints_for(workload)
+        if not applicable(self.name, eff):
+            return None
+        if util_p95 < 0.5:
+            new = max(1.0, cores / 2)
+        elif util_p95 > 0.9:
+            new = cores * 2
+        else:
+            return None
+        self.notify(H.PlatformEvent.RIGHTSIZE_RECOMMENDATION, workload, vm,
+                    new_cores=new, old_cores=cores)
+        self.stats["recommendations"] += 1
+        return new
+
+    def scan_cluster(self, cluster, admission=None, apply: bool = False,
+                     max_changes: int = 64,
+                     vms: Optional[Sequence] = None) -> List[Action]:
+        """Recommend (and with ``apply`` enact through the admission books)
+        resizes for over/under-provisioned VMs of rightsizing-applicable
+        workloads."""
+        acts: List[Action] = []
+        for v in (vms if vms is not None else self._alive_placed(cluster)):
+            if len(acts) >= max_changes:
+                break
+            if not v.alive or not v.server:
+                continue
+            new = self.recommend(v.workload, v.vm_id, v.util_p95, v.cores)
+            if new is None or new == v.cores:
+                continue
+            if apply and admission is not None:
+                old_cores, old_util = v.cores, v.util_p95
+                if new < old_cores and \
+                        old_util * old_cores / new > self.SHRINK_UTIL_CAP:
+                    # hysteresis: a shrink whose post-resize utilization
+                    # would immediately re-trigger the grow rule (util in
+                    # (0.9, 1.0) flaps 2x<->0.5x forever otherwise) is not
+                    # applied — the recommendation still goes out
+                    self.stats["resize_skipped_unstable"] += 1
+                    acts.append(Action("recommend_only", vm=v.vm_id,
+                                       workload=v.workload,
+                                       payload={"new_cores": new}))
+                    continue
+                ok, reason = admission.resize(v, new)
+                if not ok:
+                    self.stats["resize_rejected"] += 1
+                    continue
+                # demand conservation: the workload's load did not change,
+                # so p95 utilization moves inversely with the size — which
+                # also keeps the pass from re-resizing the same VM forever
+                admission.set_util_p95(
+                    v, min(0.95, old_util * old_cores / new))
+                self.stats["resized"] += 1
+            acts.append(Action("resize", vm=v.vm_id, workload=v.workload,
+                               payload={"new_cores": new}))
+        return acts
+
+    def on_tick(self, now: float) -> List[Action]:
+        if self.sched is None:
+            return []
+        acts = self.scan_cluster(self.sched.cluster, self.sched.admission,
+                                 apply=self.sched.apply_rightsizing,
+                                 vms=self.sched.alive_placed_vms())
+        self.sched.note_policy_actions(self.name, acts)
+        return acts
+
+
+class MADatacenterPolicy(OptimizationPolicy):
+    name = "ma_datacenters"
+    consumes_deploy = ("availability_nines", "preemptibility_pct",
+                       "scale_up_down")
+    publishes = (H.PlatformEvent.THROTTLE_NOTICE,
+                 H.PlatformEvent.EVICTION_NOTICE)
+
+    def shed(self, server: str, need: float,
+             entries: Sequence[Tuple[float, str, str, float, Dict]]
+             ) -> List[Action]:
+        """Shared core: shed ``need`` cores of power by throttling
+        low-availability VMs first, then evicting preemptible ones (§2.2 MA
+        DCs).  ``entries`` rows are (availability_nines, vm_id, workload,
+        cores, eff_hints), any order."""
+        acts: List[Action] = []
+        for nines, vm_id, workload, cores, eff in sorted(
+                entries, key=lambda r: (r[0], r[1])):
+            if need <= 0:
+                break
+            if nines <= 3.0:
+                self.notify(H.PlatformEvent.THROTTLE_NOTICE, workload,
+                            f"{server}/{vm_id}", frac=0.5,
+                            cause="power_event")
+                acts.append(Action("throttle", vm=vm_id, workload=workload,
+                                   payload={"frac": 0.5}))
+                need -= cores * 0.5
+                self.stats["throttles"] += 1
+            elif eff["preemptibility_pct"] >= 20.0:
+                self.notify(H.PlatformEvent.EVICTION_NOTICE, workload,
+                            f"{server}/{vm_id}", deadline_s=10.0,
+                            cause="power_event")
+                acts.append(Action("evict", vm=vm_id, workload=workload))
+                need -= cores
+                self.stats["evictions"] += 1
+        return acts
+
+    def power_event_cluster(self, cluster, server: str, shed_frac: float,
+                            exclude=frozenset()) -> List[Action]:
+        """Infrastructure event against the live cluster: walked via the
+        per-server vm index; ``exclude`` skips VMs already mid-eviction."""
+        entries = []
+        for v in self._vms_on(cluster, server):
+            if v.vm_id in exclude:
+                continue
+            eff = self.hints_for(v.workload, f"{server}/{v.vm_id}")
+            entries.append((eff["availability_nines"], v.vm_id, v.workload,
+                            v.cores, eff))
+        need = shed_frac * cluster.servers[server].cores
+        return self.shed(server, need, entries)
+
+
+ALL_POLICIES = (SpotPolicy, HarvestPolicy, AutoScalingPolicy,
+                OverclockingPolicy, UnderclockingPolicy,
+                NonPreprovisionPolicy, RegionAgnosticPolicy,
+                OversubscriptionPolicy, RightsizingPolicy,
+                MADatacenterPolicy)

@@ -1,15 +1,22 @@
-"""Pricing & benefit models for the ten optimizations (paper Table 2).
+"""Pricing & benefit models for the ten optimizations (paper Table 2),
+plus the per-VM metering/billing layer.
 
 Each optimization has: the resource it manages, the average user benefit
 (relative cost multiplier vs a Regular VM), min/max pricing anchors, and the
 platform benefit model.  These are the paper's published numbers — the §6.4
 provider-scale reproduction (sim/provider_scale.py) must recover the 48.8%
-average saving from them.
+average saving from them, analytically *and* dynamically: ``BillingMeter``
+accumulates per-VM core-hour meters at the Table-2 price multipliers from
+the scheduler's decision records on the bus (places/migrations/resizes on
+``wi.sched.decisions``, kills and early releases on ``wi.sched.evictions``)
+and reconciles against the cluster's own core-hour integral.  Within each
+§6.4 conflict set at most one optimization is ever billed on a VM
+(``billed_set``); Table-4 priorities order the managers' actions.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, FrozenSet, Tuple
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 REGULAR_PRICE = 1.0     # normalized $/core-hour
 
@@ -133,6 +140,236 @@ def combined_carbon(opts) -> float:
     for o in chosen:
         keep *= 1.0 - PRICING[o].carbon_benefit
     return 1.0 - keep
+
+
+def billed_set(opts: Iterable[str],
+               eff_hints: Optional[Dict] = None) -> Tuple[str, ...]:
+    """Conflict-resolved billable optimization set for one VM.
+
+    Keeps only known optimizations, drops any that the workload's effective
+    hints make inapplicable (Table 3 requirements, when hints are given),
+    and collapses each §6.4 conflict set to its single cheapest member —
+    the invariant the metering layer enforces: two optimizations that
+    contend for the same resource are never co-billed on one VM.
+    """
+    out = {o for o in opts if o in PRICING}
+    if eff_hints is not None:
+        out = {o for o in out if applicable(o, eff_hints)}
+    for cs in CONFLICT_SETS:
+        inter = out & cs
+        if len(inter) > 1:
+            best = min(inter, key=lambda o: (PRICING[o].price_multiplier, o))
+            out -= cs
+            out.add(best)
+    return tuple(sorted(out))
+
+
+# Extension hint carrying a workload's chosen optimization enrollments
+# (validated by the 'x-' namespace rule); absent means "bill everything
+# the hints make applicable".
+ENROLLED_HINT_KEY = "x-enrolled-opts"
+
+
+class _VMMeter:
+    """One VM's running bill: core-hours x Table-2 multiplier."""
+    __slots__ = ("vm_id", "workload", "cores", "rate", "opts", "last_t",
+                 "core_hours", "cost", "open")
+
+    def __init__(self, vm_id: str, workload: str, cores: float, rate: float,
+                 opts: Tuple[str, ...], t: float):
+        self.vm_id = vm_id
+        self.workload = workload
+        self.cores = cores
+        self.rate = rate
+        self.opts = opts
+        self.last_t = t
+        self.core_hours = 0.0
+        self.cost = 0.0
+        self.open = True
+
+
+class BillingMeter:
+    """Per-VM metering driven by the scheduler's bus records.
+
+    Construct it *before* the first placement so it observes every decision
+    record.  Lifecycle it tracks:
+
+      * ``wi.sched.decisions`` — ``place`` opens a meter at the decision's
+        timestamp (cores read from the cluster registry); ``migrate`` /
+        ``defrag`` are continuity (the VM never stopped running);
+        ``resize`` re-reads the VM's cores after accruing at the old size;
+      * ``wi.sched.evictions`` — ``evicted`` / ``early_released`` close the
+        meter at the record's timestamp;
+      * cluster kill listeners — kills that bypass the pipeline (scenario
+        churn) close at the cluster clock; closing is idempotent, so the
+        eviction record arriving afterwards is a no-op;
+      * hint-change topics — a workload's billed set is re-resolved from
+        the store and its open meters re-rated (accrued at the old rate up
+        to the change, the new rate after).
+
+    The billed set per workload is ``billed_set(enrolled, effective
+    hints)``: the workload's ``x-enrolled-opts`` extension hint (all
+    applicable optimizations when absent) filtered by Table-3 applicability
+    and collapsed per §6.4 conflict set.  ``reconcile`` cross-checks total
+    metered core-hours against the cluster's own core-hour integral.
+    """
+
+    def __init__(self, gm, cluster):
+        from repro.core import hints as H
+        self.gm = gm
+        self.cluster = cluster
+        self.meters: Dict[str, _VMMeter] = {}
+        self.core_hours = 0.0
+        self.cost = 0.0
+        self._rate_cache: Dict[str, Tuple[Tuple[str, ...], float]] = {}
+        # workload -> open meter vm_ids: hint-change re-rating touches only
+        # the affected workload's open meters, not the whole (growing)
+        # meter registry — per-VM runtime hints under churn would otherwise
+        # cost O(hint events x total VMs)
+        self._open_by_workload: Dict[str, set] = {}
+        gm.bus.subscribe(H.TOPIC_SCHED_DECISIONS, self._on_decisions)
+        gm.bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction)
+        gm.bus.subscribe(H.TOPIC_DEPLOY_HINTS, self._on_hint_change)
+        gm.bus.subscribe(H.TOPIC_RUNTIME_HINTS, self._on_hint_change)
+        kills = getattr(cluster, "kill_listeners", None)
+        if kills is not None:
+            kills.append(self._on_kill)
+
+    # -- rate resolution ----------------------------------------------------
+    def billed_for(self, workload: str) -> Tuple[Tuple[str, ...], float]:
+        """(billed opts, price multiplier) for a workload, cached until its
+        hints change."""
+        cached = self._rate_cache.get(workload)
+        if cached is None:
+            eff = self.gm.effective_hints(workload)
+            enrolled = eff.get(ENROLLED_HINT_KEY)
+            cand = tuple(PRICING) if enrolled is None else tuple(enrolled)
+            opts = billed_set(cand, eff)
+            cached = self._rate_cache[workload] = (opts, combined_price(opts))
+        return cached
+
+    # -- accrual ------------------------------------------------------------
+    def _now(self) -> float:
+        clock = getattr(self.cluster, "clock", None)
+        return clock() if clock is not None else 0.0
+
+    def _accrue(self, m: _VMMeter, t: float):
+        dt = t - m.last_t
+        if dt > 0:
+            ch = m.cores * dt / 3600.0
+            m.core_hours += ch
+            m.cost += ch * REGULAR_PRICE * m.rate
+            self.core_hours += ch
+            self.cost += ch * REGULAR_PRICE * m.rate
+            m.last_t = t
+
+    def _open(self, vm_id: str, workload: str, t: float):
+        m = self.meters.get(vm_id)
+        if m is not None and m.open:
+            return
+        vm = self.cluster.vms.get(vm_id)
+        cores = (vm.cores + vm.harvested) if vm is not None else 0.0
+        opts, rate = self.billed_for(workload)
+        if m is not None:           # re-placed after a close (failover):
+            # the gap while it was down is not billed — restart the clock
+            m.cores, m.rate, m.opts, m.last_t, m.open = \
+                cores, rate, opts, t, True
+        else:
+            self.meters[vm_id] = _VMMeter(vm_id, workload, cores, rate,
+                                          opts, t)
+        self._open_by_workload.setdefault(workload, set()).add(vm_id)
+
+    def _close(self, vm_id: str, t: float):
+        m = self.meters.get(vm_id)
+        if m is not None and m.open:
+            self._accrue(m, t)
+            m.open = False
+            open_ids = self._open_by_workload.get(m.workload)
+            if open_ids is not None:
+                open_ids.discard(vm_id)
+
+    def _rerate_cores(self, vm_id: str, t: float):
+        m = self.meters.get(vm_id)
+        vm = self.cluster.vms.get(vm_id)
+        if m is None or not m.open or vm is None:
+            return
+        self._accrue(m, t)
+        m.cores = vm.cores + vm.harvested
+
+    # -- bus reactions ------------------------------------------------------
+    def _on_decisions(self, rec):
+        d = rec.value
+        if not isinstance(d, dict):
+            return
+        kind = d.get("kind")
+        fields = d.get("fields", ())
+        for row in d.get("decisions", ()):
+            r = (row._asdict() if hasattr(row, "_asdict")
+                 else dict(zip(fields, row)))
+            if not r.get("server"):
+                continue                    # rejected placement
+            if kind in ("place", "migrate", "defrag"):
+                self._open(r["vm_id"], r["workload"], r.get("t", 0.0))
+            elif kind == "resize":
+                self._rerate_cores(r["vm_id"], r.get("t", 0.0))
+
+    def _on_eviction(self, rec):
+        d = rec.value
+        if isinstance(d, dict) and d.get("event") in (
+                "evicted", "early_released", "already_gone"):
+            self._close(d.get("vm", ""), d.get("t", self._now()))
+
+    def _on_kill(self, vm):
+        self._close(vm.vm_id, self._now())
+
+    def _on_hint_change(self, rec):
+        d = rec.value
+        if not isinstance(d, dict) or "workload" not in d:
+            return
+        w = d["workload"]
+        if self._rate_cache.pop(w, None) is None:
+            return                          # never billed: nothing to re-rate
+        t = d.get("ts", d.get("t", self._now()))
+        opts, rate = self.billed_for(w)
+        for vm_id in self._open_by_workload.get(w, ()):
+            m = self.meters[vm_id]
+            if m.open:
+                self._accrue(m, t)
+                m.rate, m.opts = rate, opts
+
+    # -- reporting ----------------------------------------------------------
+    def accrue_all(self, now: float):
+        for m in self.meters.values():
+            if m.open:
+                self._accrue(m, now)
+
+    @property
+    def regular_cost(self) -> float:
+        return self.core_hours * REGULAR_PRICE
+
+    @property
+    def saving(self) -> float:
+        reg = self.regular_cost
+        return 1.0 - self.cost / reg if reg else 0.0
+
+    def summary(self, now: float) -> Dict[str, Any]:
+        self.accrue_all(now)
+        return {
+            "core_hours": self.core_hours,
+            "cost": self.cost,
+            "regular_cost": self.regular_cost,
+            "saving": self.saving,
+            "vms_metered": len(self.meters),
+            "vms_open": sum(1 for m in self.meters.values() if m.open),
+        }
+
+    def reconcile(self, now: float) -> Dict[str, float]:
+        """Metered core-hours vs the cluster's own integral (must agree)."""
+        self.accrue_all(now)
+        cluster_ch = self.cluster.core_hours(now)
+        return {"metered_core_hours": self.core_hours,
+                "cluster_core_hours": cluster_ch,
+                "abs_diff": abs(self.core_hours - cluster_ch)}
 
 
 class CostMeter:

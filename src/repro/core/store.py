@@ -8,8 +8,13 @@ Guarantees the paper needs from "CloudDB":
     consistent pull reads,
   * range scans by key prefix (aggregation queries).
 
-Property-tested in tests/test_wi_store.py: crash at any WAL byte prefix
-recovers a prefix of committed writes.
+Property-tested in tests/test_wi_store.py (hypothesis): crash at any WAL
+byte prefix recovers a prefix of committed writes.
+
+The store owns a WAL file handle when given a root directory; call
+``close()`` (or use the store as a context manager) from scenario teardown
+so long soak runs do not leak descriptors.  ``GlobalManager.close()`` does
+this for the store it owns.
 """
 from __future__ import annotations
 
@@ -135,3 +140,9 @@ class Store:
             if self._wal is not None:
                 self._wal.close()
                 self._wal = None
+
+    def __enter__(self) -> "Store":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

@@ -80,6 +80,54 @@ class AdmissionController:
         self.stats["admitted"] += 1
         return True, "ok"
 
+    def shift_demand(self, server_id: str, delta: float):
+        """Move a server's reserved demand by ``delta`` for a demand-model
+        change outside admit/release (harvest grow/shrink, load shed).
+        The controller has no per-VM records, so callers that mutate a
+        placed VM's demand route the books change through here."""
+        self.reserved[server_id] = max(0.0, self.reserved[server_id] + delta)
+
+    def set_util_p95(self, vm: VM, new_util: float):
+        """Change a placed VM's p95 utilization with the reservation books
+        following: oversubscribed VMs reserve ``cores * util_p95``, so the
+        delta moves with the utilization (load shed, demand-conserving
+        rescale/resize).  The cluster's own counters follow through field
+        interception."""
+        old = vm.util_p95
+        vm.util_p95 = new_util
+        if vm.alive and vm.server and vm.oversubscribed:
+            self.shift_demand(vm.server, vm.cores * (new_util - old))
+
+    def resize(self, vm: VM, new_cores: float) -> Tuple[bool, str]:
+        """Resize a VM in place (rightsizing / auto-scaling decisions).
+        Shrinks always succeed; growth must clear the same commitment cap
+        and headroom checks as admission.  The cores change goes through
+        the VM's field interception, so the cluster books follow."""
+        if new_cores <= 0:
+            return False, "bad_size"
+        delta = new_cores - vm.cores
+        if not vm.server:
+            vm.cores = new_cores
+            return True, "unplaced"
+        srv = self.cluster.servers.get(vm.server)
+        if srv is None:
+            return False, "no_such_server"
+        demand_delta = delta * (vm.util_p95 if vm.oversubscribed else 1.0)
+        if delta > 0:
+            if self.nominal[vm.server] + delta > \
+                    srv.cores * self.oversub_ratio + EPS:
+                self.stats["resize_rejected_oversub_commit_cap"] += 1
+                return False, "oversub_commit_cap"
+            if self.reserved[vm.server] + demand_delta > srv.cores + EPS:
+                self.stats["resize_rejected_capacity"] += 1
+                return False, "capacity"
+        self.nominal[vm.server] = max(0.0, self.nominal[vm.server] + delta)
+        self.reserved[vm.server] = max(0.0,
+                                       self.reserved[vm.server] + demand_delta)
+        vm.cores = new_cores
+        self.stats["resized"] += 1
+        return True, "ok"
+
     def release(self, vm: VM):
         """Return a placed VM's reservation (eviction, migration, kill)."""
         if not vm.server:

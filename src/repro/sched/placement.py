@@ -495,6 +495,7 @@ class Placer:
                         reserved[sid] += pend_res
                         nominal[sid] += pend_nom
                         used_c[sid] += pend_used
+                        cluster._bump_used_total(pend_used)
                         p95_c[sid] += pend_p95
                         # counts kept even for unlimited workloads: a later
                         # hint change may lower the spread limit
@@ -546,6 +547,7 @@ class Placer:
                 reserved[sid] += pend_res
                 nominal[sid] += pend_nom
                 used_c[sid] += pend_used
+                cluster._bump_used_total(pend_used)
                 p95_c[sid] += pend_p95
                 colocated[(sid, workload)] += pend_colo
                 dirty_s.add(sid)

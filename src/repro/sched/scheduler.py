@@ -11,7 +11,13 @@ Wires the pieces together and runs the main loop:
   * capacity crunch handling: defragment by migrating region-agnostic VMs
     out of the crunched region, then reclaim spot capacity through the
     ``EvictionPipeline`` (notices honored, kills on the engine's clock);
-  * maintenance-aware power events routed from ``MADatacenterManager``;
+  * maintenance-aware power events routed through ``MADatacenterPolicy``;
+  * a periodic optimization pass (``run_policies``, gated by
+    ``policy_period_s``) driving the tick-driven ``OptimizationPolicy``
+    hooks — rightsizing, oversubscription pressure, auto-scaling,
+    under/overclocking, harvest rebalancing — in Table-4 priority order
+    against the incremental cluster (the dict-of-dicts view path is
+    retired);
   * region failover: displaced VMs are re-queued and re-placed on
     surviving regions;
   * decision telemetry on ``wi.sched.decisions`` (batched records: one
@@ -26,8 +32,9 @@ from typing import Deque, Dict, List, Optional
 
 from repro.core import hints as H
 from repro.core.global_manager import GlobalManager
-from repro.core.optimizations import MADatacenterManager, SpotManager
-from repro.core.pricing import applicable
+from repro.core.optimizations import ALL_POLICIES, MADatacenterPolicy, \
+    SpotPolicy
+from repro.core.pricing import PRIORITY, applicable
 from repro.sim.cluster import VM, Cluster
 from repro.sim.engine import Engine
 
@@ -47,19 +54,42 @@ class Scheduler:
                  max_migrations_per_tick: int = 64,
                  max_defrag_migrations: int = 256,
                  decision_log_cap: int = 10_000,
-                 publish_decisions: bool = True):
+                 publish_decisions: bool = True,
+                 policy_period_s: float = 0.0,
+                 apply_rightsizing: bool = False):
         self.engine = engine or Engine()
         self.gm = gm or GlobalManager(clock=self.engine.clock,
                                       hint_rate_per_s=1e6, hint_burst=1e6)
         self.cluster = cluster or Cluster()
+        if self.cluster.clock is None:      # start the core-hour integral
+            self.cluster.attach_clock(self.engine.clock)
         self.admission = AdmissionController(self.cluster, oversub_ratio)
         self.placer = Placer(self.gm, self.cluster, self.admission,
                              default_region, objective)
         self.evictor = EvictionPipeline(self.gm, self.cluster, self.engine,
                                         release_cb=self.placer.unplace,
                                         default_notice_s=default_notice_s)
-        self.spot = SpotManager(self.gm, eviction_notice_s=default_notice_s)
-        self.madc = MADatacenterManager(self.gm)
+        # the ten Table-2 optimizations, bound to this scheduler's loops
+        # (Table-4 priority order — higher-priority optimizations act first
+        # on each policy pass)
+        self.policies = {
+            cls.name: (cls(self.gm, eviction_notice_s=default_notice_s)
+                       if cls is SpotPolicy else cls(self.gm)).bind(self)
+            for cls in sorted(ALL_POLICIES, key=lambda c: PRIORITY[c.name])}
+        self.spot: SpotPolicy = self.policies["spot"]
+        self.madc: MADatacenterPolicy = self.policies["ma_datacenters"]
+        # which policies run on the periodic pass, in Table-4 priority
+        # order (the rest are event-driven: spot/ma_datacenters from
+        # crunches and power events, region_agnostic enacted continuously
+        # by the placer + defrag loop, non_preprovision at submit)
+        self.tick_policies = ("rightsizing", "oversubscription",
+                              "auto_scaling", "underclocking",
+                              "overclocking", "harvest")
+        self.policy_period_s = policy_period_s
+        self.apply_rightsizing = apply_rightsizing
+        self._next_policy_t = 0.0
+        self._pass_vms: Optional[List] = None
+        self._seen_workloads: set = set()
         self.max_migrations_per_tick = max_migrations_per_tick
         self.max_defrag_migrations = max_defrag_migrations
         self.publish_decisions = publish_decisions
@@ -86,6 +116,13 @@ class Scheduler:
 
     # -- intake -------------------------------------------------------------
     def submit(self, vm: VM):
+        if vm.workload not in self._seen_workloads:
+            # consult the non-preprovision policy once per workload: a
+            # deploy-time-tolerant workload skips the pre-provisioned pool
+            self._seen_workloads.add(vm.workload)
+            if not self.policies["non_preprovision"].should_preprovision(
+                    vm.workload):
+                self.stats["non_preprovisioned_workloads"] += 1
         self.cluster.enqueue(vm)
         self.stats["submitted"] += 1
 
@@ -182,7 +219,51 @@ class Scheduler:
 
     def tick(self):
         self.react_to_hints()
+        if self.policy_period_s > 0 and \
+                self.engine.clock.t >= self._next_policy_t:
+            self._next_policy_t = self.engine.clock.t + self.policy_period_s
+            self.run_policies(self.engine.clock.t)
         self.schedule_pending()
+
+    # -- the periodic optimization pass -------------------------------------
+    def run_policies(self, now: Optional[float] = None):
+        """Drive every tick-driven optimization policy once, in Table-4
+        priority order.  Gated by ``policy_period_s`` from ``tick`` so the
+        steady-state scheduling hot path pays nothing when disabled."""
+        now = self.engine.clock.t if now is None else now
+        self._pass_vms = None       # fresh snapshot for this pass
+        for name in self.tick_policies:
+            self.policies[name].on_tick(now)
+        self.stats["policy_passes"] += 1
+        self._flush_records()
+
+    def alive_placed_vms(self) -> List:
+        """Alive placed VMs in deterministic vm-id order, snapshotted once
+        per policy pass (one sort instead of one per policy).  Policies
+        re-check liveness per VM: an in-pass guest ack can early-release
+        a VM after the snapshot was taken."""
+        if self._pass_vms is None:
+            vms = self.cluster.vms
+            self._pass_vms = [vms[vid] for vid in sorted(vms)
+                              if vms[vid].alive and vms[vid].server]
+        return self._pass_vms
+
+    def note_policy_actions(self, policy: str, actions) -> None:
+        """Telemetry hook for policy hooks: count per-kind stats and record
+        state-changing actions (resize / grow / shrink) as decision records
+        so downstream consumers (billing meters, agent runtimes) see them
+        on ``wi.sched.decisions``."""
+        now = self.engine.clock.t
+        for a in actions:
+            self.stats[f"policy_{policy}_{a.kind}"] += 1
+            if a.kind in ("resize", "grow", "shrink"):
+                vm = self.cluster.vms.get(a.vm)
+                if vm is None or not vm.server:
+                    continue
+                region = self.cluster.servers[vm.server].region
+                self._record(Decision(a.vm, a.workload, vm.server, region,
+                                      vm.oversubscribed, a.kind, now),
+                             kind="resize")
 
     def start(self, period_s: float, until: float):
         """Run the scheduling loop on the engine clock."""
@@ -235,20 +316,13 @@ class Scheduler:
         freed = self.defragment(region, cores_needed)
         tickets = []
         if freed < cores_needed:
-            view = self.cluster.view()
-            # restrict reclaim to spot VMs inside the crunched region that
-            # are not already mid-eviction (their cores are spoken for) —
-            # walked via the cluster's per-server vm index, O(region VMs)
-            # instead of O(all VMs)
-            vms_view = view["vms"]
-            mid_eviction = self.evictor.tickets
-            in_region = {}
-            for sid in self.cluster.servers_in_region(region):
-                for vid in self.cluster.vm_ids_on(sid):
-                    if vid not in mid_eviction and vid in vms_view:
-                        in_region[vid] = vms_view[vid]
-            acts = self.spot.reclaim({**view, "vms": in_region},
-                                     cores_needed - freed)
+            # spot reclaim straight off the cluster's per-server vm index
+            # (O(region VMs)); VMs already mid-eviction are excluded —
+            # their cores are spoken for
+            acts = self.spot.reclaim_cores(self.cluster,
+                                           cores_needed - freed,
+                                           region=region,
+                                           exclude=self.evictor.tickets)
             tickets = self.evictor.submit(acts, source="spot")
             freed += sum(self.cluster.vms[t.vm_id].cores for t in tickets)
         self.stats["capacity_crunches"] += 1
@@ -259,17 +333,11 @@ class Scheduler:
     def power_event(self, server: str, shed_frac: float) -> Dict:
         """MA-datacenter power event: throttle low-availability VMs, evict
         preemptible ones (through the notice pipeline)."""
-        view = self.cluster.view()
-        # only this server's VMs matter, and VMs already mid-eviction must
-        # not be re-selected (their cores would double-count toward the
-        # shed target and then be dropped) — restrict via the vm index
-        vms_view = view["vms"]
-        mid_eviction = self.evictor.tickets
-        on_server = {vid: vms_view[vid]
-                     for vid in self.cluster.vm_ids_on(server)
-                     if vid not in mid_eviction and vid in vms_view}
-        view = {**view, "vms": on_server}
-        acts = self.madc.power_event(view, server, shed_frac)
+        # walked via the cluster's per-server vm index; VMs already
+        # mid-eviction are excluded (their cores would double-count toward
+        # the shed target and then be dropped)
+        acts = self.madc.power_event_cluster(self.cluster, server, shed_frac,
+                                             exclude=self.evictor.tickets)
         tickets = self.evictor.submit(acts, source="ma_datacenters")
         throttles = [a for a in acts if a.kind == "throttle"]
         self.stats["power_events"] += 1

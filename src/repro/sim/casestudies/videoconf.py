@@ -19,9 +19,9 @@ import random
 from typing import Dict
 
 from repro.core.global_manager import GlobalManager
-from repro.core.optimizations import (NonPreprovisionManager,
-                                      RegionAgnosticManager,
-                                      RightsizingManager)
+from repro.core.optimizations import (NonPreprovisionPolicy,
+                                      RegionAgnosticPolicy,
+                                      RightsizingPolicy)
 from repro.core.pricing import PRICING
 from repro.sim.cluster import Cluster
 
@@ -49,12 +49,12 @@ def run(seed: int = 0) -> Dict[str, Dict[str, float]]:
         "scale_out_in": True, "scale_up_down": True,
         "delay_tolerance_ms": 150.0, "availability_nines": 4.0,
         "region_independent": True, "preemptibility_pct": 20.0})
-    pre = NonPreprovisionManager(gm)
+    pre = NonPreprovisionPolicy(gm)
     assert pre.should_preprovision("videoconf")  # strict deploy time => keep
-    region_mgr = RegionAgnosticManager(gm)
-    rs = RightsizingManager(gm)
+    region_mgr = RegionAgnosticPolicy(gm)
+    rs = RightsizingPolicy(gm)
     cluster = Cluster()
-    region = region_mgr.place(cluster.view(), "videoconf", "region-0",
+    region = region_mgr.place(cluster, "videoconf", "region-0",
                               objective="carbon")
     assert rs.recommend("videoconf", "media-vm", util_p95=0.45,
                         cores=VM_CORES) is not None

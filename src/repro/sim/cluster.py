@@ -102,6 +102,14 @@ class Cluster:
         self._used: Dict[str, float] = {}       # nominal + harvested cores
         self._p95: Dict[str, float] = {}        # p95-aware demand
         self._on_server: Dict[str, Set[str]] = {}   # alive placed vm-ids
+        # -- core-hour integral (billing reconciliation) --------------------
+        # total allocated cores across all servers, integrated over sim time
+        # once a clock is attached (Scheduler attaches its engine clock);
+        # the BillingMeter cross-checks its per-VM meters against this.
+        self.clock = None                       # callable -> sim seconds
+        self._used_total = 0.0
+        self._core_seconds = 0.0
+        self._accrued_t = 0.0
         # -- cached view ----------------------------------------------------
         self._view: Optional[Dict] = None
         self._dirty_vms: Set[str] = set()
@@ -130,12 +138,46 @@ class Cluster:
         self._on_server[server_id] = set()
         self._dirty_servers.add(server_id)
 
+    # -- core-hour integral ---------------------------------------------------
+    def attach_clock(self, clock):
+        """Start integrating allocated core-seconds on ``clock`` (a callable
+        returning sim time).  Attaching resets the integration origin to
+        the clock's current instant."""
+        self.clock = clock
+        self._accrued_t = clock()
+
+    def _accrue_used(self, delta: float):
+        """Integrate the running total up to now, then apply a change to
+        it.  Every mutation of per-server ``used`` flows through here (or
+        through ``_bump_used_total`` from the batch placer's flush)."""
+        if self.clock is not None:
+            t = self.clock()
+            if t > self._accrued_t:
+                self._core_seconds += self._used_total * (t - self._accrued_t)
+                self._accrued_t = t
+        self._used_total += delta
+
+    # placement.py's drain loop accumulates per-server deltas in locals and
+    # flushes once per server walk; this is its (cheap) total-counter hook
+    _bump_used_total = _accrue_used
+
+    def core_hours(self, now: Optional[float] = None) -> float:
+        """Allocated core-hours integrated since the clock was attached."""
+        self._accrue_used(0.0)
+        extra = 0.0
+        if now is not None and now > self._accrued_t:
+            extra = self._used_total * (now - self._accrued_t)
+            self._core_seconds += extra
+            self._accrued_t = now
+        return self._core_seconds / 3600.0
+
     # -- accounting internals ------------------------------------------------
     def _account(self, vm: VM, sign: float):
         """Add (sign=+1) or remove (sign=-1) an alive placed VM's demand."""
         sid = vm.server
         nominal = vm.cores + vm.harvested
         self._used[sid] = self._used.get(sid, 0.0) + sign * nominal
+        self._accrue_used(sign * nominal)
         p95 = vm.cores * vm.util_p95 if vm.oversubscribed else nominal
         self._p95[sid] = self._p95.get(sid, 0.0) + sign * p95
         on = self._on_server.get(sid)
@@ -187,6 +229,10 @@ class Cluster:
             if index != truth_index:
                 raise AssertionError(f"{sid}: vm index {index} != "
                                      f"{truth_index}")
+        want_total = sum(truth["used"].values())
+        if abs(self._used_total - want_total) > tol:
+            raise AssertionError(f"used_total {self._used_total} != "
+                                 f"{want_total}")
 
     # -- VM registry ---------------------------------------------------------
     def add_vm(self, vm: VM):
@@ -224,6 +270,7 @@ class Cluster:
         self.vms[vm.vm_id] = vm
         if vm.alive:
             self._used[server_id] += vm.cores + vm.harvested
+            self._accrue_used(vm.cores + vm.harvested)
             self._p95[server_id] += p95_demand
             self._on_server[server_id].add(vm.vm_id)
             self._dirty_servers.add(server_id)

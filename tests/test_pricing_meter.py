@@ -1,0 +1,192 @@
+"""Table-4 priority ordering, §6.4 conflict sets, and the metering layer.
+
+The billing invariant under test: two optimizations that contend for the
+same resource (one §6.4 conflict set) are never co-billed on one VM, no
+matter what a workload enrolls in — and the per-VM meters reconcile exactly
+with the cluster's own core-hour integral.
+"""
+from itertools import combinations
+
+import pytest
+
+from repro.core.pricing import (CONFLICT_SETS, ENROLLED_HINT_KEY, PRICING,
+                                PRIORITY, BillingMeter, applicable,
+                                applicable_set, billed_set, combined_price)
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+
+
+# -- Table 4 ----------------------------------------------------------------
+
+def test_table4_priority_ordering():
+    # exact Table-4 ranks: 0 = highest (on-demand), spare-compute tiers last
+    want = ["on_demand", "ma_datacenters", "rightsizing", "oversubscription",
+            "auto_scaling", "non_preprovision", "region_agnostic",
+            "underclocking", "overclocking", "spot", "harvest"]
+    assert sorted(PRIORITY, key=PRIORITY.get) == want
+    assert PRIORITY["on_demand"] == 0
+    assert [PRIORITY[o] for o in want] == list(range(len(want)))
+    # every priced optimization has a priority (the manager base asserts it)
+    assert set(PRICING) <= set(PRIORITY)
+
+
+def test_spot_reclaim_respects_harvest_tier_priority():
+    """Table 4: harvest (lowest priority) is reclaimed before spot when
+    keep-priorities tie."""
+    from repro.core.optimizations import SpotPolicy
+    from repro.core.global_manager import GlobalManager
+    from repro.sim.cluster import Cluster
+    gm = GlobalManager(hint_rate_per_s=1e6, hint_burst=1e6)
+    gm.register_workload("w", {"preemptibility_pct": 50.0})
+    cl = Cluster()
+    cl.add_server("s0", 64)
+    cl.add_vm(VM("vm-a", "w", "s0", 8, spot=True))             # plain spot
+    cl.add_vm(VM("vm-b", "w", "s0", 8, spot=True, harvest=True))
+    acts = SpotPolicy(gm).reclaim_cores(cl, cores_needed=8)
+    assert [a.vm for a in acts] == ["vm-b"]
+
+
+# -- §6.4 conflict sets -----------------------------------------------------
+
+def test_conflict_sets_cover_shared_resources():
+    spare, freq = CONFLICT_SETS
+    assert spare == frozenset({"spot", "harvest", "non_preprovision"})
+    assert freq == frozenset({"overclocking", "underclocking",
+                              "ma_datacenters"})
+    for cs in CONFLICT_SETS:
+        resources = {PRICING[o].resource for o in cs}
+        # members of one set contend for one resource class
+        assert len(resources) == 1, resources
+
+
+def test_applicable_drives_billed_set():
+    # hints that make every spare-compute optimization applicable at once
+    eff = {"scale_up_down": True, "scale_out_in": True,
+           "preemptibility_pct": 80.0, "delay_tolerance_ms": 1000.0,
+           "deploy_time_ms": 120_000.0, "availability_nines": 3.0,
+           "region_independent": True}
+    apps = applicable_set(eff)
+    assert {"spot", "harvest", "non_preprovision"} <= set(apps)
+    billed = billed_set(apps, eff)
+    # cheapest member of each conflict set survives, nothing else from it
+    assert "harvest" in billed and "spot" not in billed \
+        and "non_preprovision" not in billed
+    assert "ma_datacenters" in billed and "overclocking" not in billed
+    # applicability filter: an optimization the hints exclude never bills
+    assert "rightsizing" not in billed_set(PRICING, {**eff,
+                                                     "scale_up_down": False})
+
+
+def test_billed_set_never_co_bills_a_conflict_set():
+    opts = sorted(PRICING)
+    for r in (1, 2, 3):
+        for subset in combinations(opts, r):
+            billed = billed_set(subset)
+            for cs in CONFLICT_SETS:
+                assert len(set(billed) & cs) <= 1, (subset, billed)
+            # collapsing never changes the price the user pays
+            assert combined_price(billed) == pytest.approx(
+                combined_price(subset))
+
+
+# -- the metering layer -----------------------------------------------------
+
+def _fleet_sched(**kw):
+    s = Scheduler(default_notice_s=30.0, **kw)
+    for i in range(4):
+        s.cluster.add_server(f"s{i}", 64.0)
+    return s
+
+
+def test_meter_bills_conflict_free_and_reconciles():
+    s = _fleet_sched()
+    # adversarial enrollment: all three spare-compute optimizations at once
+    s.gm.register_workload("spare-heavy", {
+        "scale_up_down": True, "scale_out_in": True,
+        "preemptibility_pct": 80.0, "delay_tolerance_ms": 1000.0,
+        "deploy_time_ms": 120_000.0, "availability_nines": 1.0,
+        ENROLLED_HINT_KEY: ["spot", "harvest", "non_preprovision"]})
+    s.gm.register_workload("plain", {})
+    meter = BillingMeter(s.gm, s.cluster)
+    s.submit(VM("v0", "spare-heavy", "", 8.0, spot=True, harvest=True))
+    s.submit(VM("v1", "plain", "", 4.0))
+    s.schedule_pending()
+    s.run_until(3600.0)
+
+    m0, m1 = meter.meters["v0"], meter.meters["v1"]
+    assert m0.opts == ("harvest",)          # never co-billed with spot/nonpre
+    assert m0.rate == PRICING["harvest"].price_multiplier
+    assert m1.opts == () and m1.rate == 1.0
+    summary = meter.summary(3600.0)
+    assert summary["core_hours"] == pytest.approx(12.0)
+    assert summary["cost"] == pytest.approx(8.0 * 0.09 + 4.0 * 1.0)
+    rec = meter.reconcile(3600.0)
+    assert rec["abs_diff"] < 1e-9
+    for m in meter.meters.values():
+        for cs in CONFLICT_SETS:
+            assert len(set(m.opts) & cs) <= 1
+
+
+def test_meter_closes_on_eviction_and_survives_pipeline_kill():
+    s = _fleet_sched()
+    s.gm.register_workload("spotty", {
+        "preemptibility_pct": 90.0, "delay_tolerance_ms": 1000.0,
+        ENROLLED_HINT_KEY: ["spot"]})
+    meter = BillingMeter(s.gm, s.cluster)
+    for i in range(4):
+        s.submit(VM(f"v{i}", "spotty", "", 8.0, spot=True))
+    s.schedule_pending()
+    s.engine.at(1800.0, lambda: s.capacity_crunch("region-0", 8.0))
+    s.run_until(3600.0)
+    killed = [t for t in s.evictor.log if t.outcome == "killed"]
+    assert len(killed) == 1
+    m = meter.meters[killed[0].vm_id]
+    assert not m.open
+    # billed exactly up to the kill: notice issued at 1800 + 30 s window
+    assert m.core_hours == pytest.approx(8.0 * 1830.0 / 3600.0)
+    assert m.cost == pytest.approx(m.core_hours * 0.15)
+    assert meter.reconcile(3600.0)["abs_diff"] < 1e-9
+    assert len(s.evictor.violations()) == 0
+
+
+def test_meter_rerates_on_hint_change():
+    s = _fleet_sched()
+    s.gm.register_workload("w", {"preemptibility_pct": 60.0,
+                                 ENROLLED_HINT_KEY: ["spot"]})
+    meter = BillingMeter(s.gm, s.cluster)
+    s.submit(VM("v0", "w", "", 8.0, spot=True))
+    s.schedule_pending()
+    s.engine.run(until=1800.0)
+    # mid-run the workload drops preemptibility: spot no longer applicable,
+    # the meter re-rates to Regular from the change instant
+    from repro.core import hints as H
+    s.gm.set_hints("w", "*", {"preemptibility_pct": 0.0},
+                   scope=H.Scope.DEPLOYMENT, source="deploy-api")
+    s.engine.run(until=3600.0)
+    m = meter.meters["v0"]
+    meter.accrue_all(3600.0)
+    assert m.opts == ()
+    assert m.cost == pytest.approx(
+        8.0 * 0.5 * 0.15 + 8.0 * 0.5 * 1.0)     # half spot, half regular
+    assert meter.reconcile(3600.0)["abs_diff"] < 1e-9
+
+
+def test_meter_tracks_resize_decisions():
+    s = _fleet_sched(policy_period_s=60.0, apply_rightsizing=True)
+    s.gm.register_workload("sizable", {
+        "scale_up_down": True, "availability_nines": 4.0,
+        "delay_tolerance_ms": 1000.0, ENROLLED_HINT_KEY: ["rightsizing"]})
+    meter = BillingMeter(s.gm, s.cluster)
+    s.submit(VM("v0", "sizable", "", 8.0, util_p95=0.3))
+    s.schedule_pending()
+    s.start(60.0, 3600.0)
+    s.run_until(3600.0)
+    vm = s.cluster.vms["v0"]
+    assert vm.cores == 4.0                  # halved by the rightsizing pass
+    assert s.admission.stats["resized"] >= 1
+    m = meter.meters["v0"]
+    meter.accrue_all(3600.0)
+    # meter accrued at 8 cores until the resize decision, 4 after
+    assert meter.reconcile(3600.0)["abs_diff"] < 1e-9
+    assert m.cores == 4.0
+    assert m.rate == PRICING["rightsizing"].price_multiplier
