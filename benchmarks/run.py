@@ -13,7 +13,10 @@ trajectory is tracked across PRs (committed as ``BENCH_sched.json``).
 
 Scheduler-scale benchmark sizes honor env overrides (used by the CI smoke
 job to run a reduced configuration): ``SCHED_SCALE_SERVERS``,
-``SCHED_SCALE_VMS``, ``SCHED_SCALE_XL_SERVERS``, ``SCHED_SCALE_XL_VMS``.
+``SCHED_SCALE_VMS``, ``SCHED_SCALE_XL_SERVERS``, ``SCHED_SCALE_XL_VMS``,
+``AGENTS_DIURNAL_SERVERS``, ``AGENTS_DIURNAL_VM_SCALE``,
+``E2E_SAVINGS_WORKLOADS``, ``E2E_SAVINGS_SERVERS``, ``AI_TRAINING_STEPS``,
+``AI_TRAINING_SERVERS``.
 """
 from __future__ import annotations
 
@@ -362,6 +365,60 @@ def agents_diurnal():
                 f"violations={r['violations']}")
 
 
+def ai_training():
+    """Trainer-as-tenant scenario: the real WITrainer under the live
+    scheduler (sim/casestudies/ai_training.py).  Runs in a subprocess so
+    XLA_FLAGS can provide the 8 virtual host devices the elastic mesh
+    needs; sizes honor AI_TRAINING_STEPS / AI_TRAINING_SERVERS."""
+    import subprocess
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    t0 = time.perf_counter()
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.sim.casestudies.ai_training"],
+        env=env, capture_output=True, text=True, timeout=540)
+    us = (time.perf_counter() - t0) * 1e6
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    r = json.loads(line[len("RESULT "):])
+    assert r["waves"] >= 2, r
+    assert r["violations"] == 0, f"{r['violations']} notice violations"
+    assert r["trainer_early_releases"] >= 1, \
+        "no trainer eviction resolved by a guest ack"
+    assert r["dp_min"] < r["dp0"], "DP width never shrank"
+    assert r["dp_regrown"] > r["dp_min"], "DP width never re-grew"
+    # only a ladder kill may lose work (an early release checkpoints and
+    # consents first), and never more than one checkpoint interval of it —
+    # with 0 ladder kills the bound is exactly 0
+    assert r["lost_work_s"] <= \
+        r["trainer_ladder_kills"] * r["ckpt_interval_s"] + 1e-9, \
+        (f"lost work {r['lost_work_s']}s exceeds one checkpoint interval "
+         f"per ladder kill")
+    assert r["losses_finite"] and r["loss_last3"] < r["loss_first3"], \
+        "loss curve broke across resizes"
+    assert r["restores"] >= 1 and r["microbatch_final"] == 0, \
+        "throttle -> microbatch-halve -> restore round trip incomplete"
+    JSON_METRICS["ai_training"] = {
+        "steps": r["steps"], "waves": r["waves"],
+        "violations": r["violations"],
+        "trainer_early_releases": r["trainer_early_releases"],
+        "trainer_ladder_kills": r["trainer_ladder_kills"],
+        "fleet_early_releases": r["fleet_early_releases"],
+        "dp0": r["dp0"], "dp_min": r["dp_min"],
+        "dp_regrown": r["dp_regrown"], "dp_final": r["dp_final"],
+        "resizes": r["resizes"],
+        "harvest_devices_granted": r["harvest_devices_granted"],
+        "lost_work_s": r["lost_work_s"],
+        "ckpt_interval_s": r["ckpt_interval_s"],
+        "throttles": r["throttles"], "restores": r["restores"],
+    }
+    return us, (f"dp={r['dp0']}->{r['dp_min']}->{r['dp_regrown']},"
+                f"early={r['trainer_early_releases']},"
+                f"violations={r['violations']},"
+                f"lost_work={r['lost_work_s']:.0f}s,"
+                f"loss={r['loss_first3']:.2f}->{r['loss_last3']:.2f}")
+
+
 def sched_scenarios():
     """Eviction-storm + capacity-crunch scenarios (sched/ subsystem)."""
     from repro.sim.casestudies.capacity_crunch import run as run_crunch
@@ -379,7 +436,7 @@ def sched_scenarios():
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
        s62_microservices, s63_videoconf, f5_savings, e2e_savings,
        sched_scale, sched_scale_xl, sched_scenarios, agents_diurnal,
-       wi_hint_throughput, kernel_flash, roofline_table]
+       ai_training, wi_hint_throughput, kernel_flash, roofline_table]
 
 # sched_scale_xl is opt-in on full runs (it needs ~100k simulated VMs);
 # request it explicitly via --only

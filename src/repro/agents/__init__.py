@@ -10,8 +10,9 @@ from repro.agents.agent import WorkloadAgent
 from repro.agents.policy import (PARTIAL, STATEFUL, STATELESS, AgentPolicy,
                                  DiurnalProfile)
 from repro.agents.runtime import AgentRuntime
+from repro.agents.trainer_agent import TrainerAgent, TrainerTenant
 
 __all__ = [
     "AgentPolicy", "AgentRuntime", "DiurnalProfile", "PARTIAL", "STATEFUL",
-    "STATELESS", "WorkloadAgent",
+    "STATELESS", "TrainerAgent", "TrainerTenant", "WorkloadAgent",
 ]

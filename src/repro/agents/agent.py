@@ -97,9 +97,16 @@ class WorkloadAgent:
         self.ckpt_running = True
         self._ckpt_gen += 1
         self.rt.metrics["checkpoints_started"] += 1
-        self.rt.engine.after(pol.checkpoint_s(),
+        self.rt.engine.after(self._begin_checkpoint(event),
                              lambda e=event, g=self._ckpt_gen:
                              self._ckpt_done(e, g))
+
+    def _begin_checkpoint(self, event: Dict[str, Any]) -> float:
+        """Start making state durable; return the modeled write latency in
+        sim seconds.  Subclasses that own real state (the trainer agent)
+        override this — the draining/ack choreography and the stale-timer
+        generation guard stay here, in one place."""
+        return self.policy.checkpoint_s()
 
     def _ckpt_done(self, event: Dict[str, Any], gen: int):
         if self.dead or gen != self._ckpt_gen:

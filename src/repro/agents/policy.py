@@ -11,7 +11,7 @@ raise availability at peak).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 STATELESS = "stateless"
 PARTIAL = "partial"
@@ -39,6 +39,10 @@ class AgentPolicy:
     scale_out_in: bool = False          # may replace an evicted VM elsewhere
     throttle_shed_frac: float = 0.5     # p95 load shed on a throttle notice
     diurnal: Optional[DiurnalProfile] = None
+    # constructs the per-VM agent ``(vm, endpoint, runtime, policy)`` —
+    # lets a workload supply a richer agent than the default
+    # ``WorkloadAgent`` (e.g. the trainer-backed ``TrainerAgent``)
+    agent_factory: Optional[Callable] = None
 
     def checkpoint_s(self) -> float:
         """Simulated checkpoint latency, proportional to state size."""

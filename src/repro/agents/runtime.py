@@ -88,7 +88,9 @@ class AgentRuntime:
         leader = self._leaders.setdefault(vm.workload, vm.vm_id)
         ep = self.local(vm.server).attach_vm(
             vm.vm_id, vm.workload, workload_manager=leader == vm.vm_id)
-        agent = WorkloadAgent(vm, ep, self, self.policy_for(vm.workload))
+        policy = self.policy_for(vm.workload)
+        factory = policy.agent_factory or WorkloadAgent
+        agent = factory(vm, ep, self, policy)
         self.agents[vm.vm_id] = agent
         self.metrics["agents_attached"] += 1
         kill_t = self._repl_pending.pop(vm.vm_id, None)

@@ -1,0 +1,351 @@
+"""The elastic JAX trainer as a real scheduler tenant (paper §4).
+
+``runtime.trainer.WITrainer`` has always *reacted* to platform events, but
+until now only to synthetic ones from ``runtime.faults.FaultInjector``.
+This module attaches the trainer to VMs placed by the real platform
+scheduler (``repro.sched``), closing the loop the paper's AI-training
+pitch needs end-to-end:
+
+  spot/harvest reclaim -> EvictionPipeline notice -> emergency checkpoint
+  (the *real* ``Checkpointer``) -> guest ack over ``wi.events.acks`` ->
+  early release -> data-parallel resize over the surviving device set ->
+  replacement VM lands -> DP width re-grows.
+
+Two pieces:
+
+  * ``TrainerAgent`` — a per-VM ``WorkloadAgent`` subclass.  Each VM of the
+    training workload is one slice of the device fleet; the agent reacts to
+    the platform events its endpoint delivers and routes them to the shared
+    tenant.  Everything it does goes through the guest channel: the ack
+    that early-releases a VM is ``VMEndpoint.ack_event`` fanned onto
+    ``wi.events.acks``, never a direct call into the pipeline.
+  * ``TrainerTenant`` — owns the shared trainer plus the VM -> device
+    mapping.  It is deliberately trainer-agnostic (anything exposing
+    ``step_once`` / ``resize_to_devices`` / ``set_throttled`` /
+    ``emergency_checkpoint`` / ``ckpt.wait`` works), so the mapping logic
+    is unit-testable without JAX; the real ``WITrainer`` is attached by the
+    ``ai_training`` case study.
+
+Event semantics:
+
+  * ``EVICTION_NOTICE`` — checkpoint the real training state *now* (it must
+    be durable before consent), schedule the ack after the modeled write
+    latency (``emergency_ckpt_s``), and request a replacement VM.  If the
+    modeled latency beats the ``kill_t`` deadline the ack lands and the VM
+    is early-released; otherwise the ladder kill wins and the work since
+    the last durable checkpoint is metered as lost.
+  * ``SCALE_UP_OFFER`` (harvest) — the granted ``extra_cores`` convert to
+    spare accelerators; DP width grows at the next step boundary.
+  * ``SCALE_DOWN_NOTICE`` (harvest shrink) — granted devices are revoked.
+  * ``THROTTLE_NOTICE`` / ``UNDERCLOCK_NOTICE`` — halve the microbatch
+    (compute shed, not demand shed); a later ``OVERCLOCK_OFFER`` restores.
+
+Resize policy: kills apply eagerly (the devices are gone — training cannot
+continue at the old width), grows apply lazily at the next step boundary so
+a replacement wave coalesces into one re-jit instead of one per VM.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Any, Dict, List, Optional
+
+from repro.core import hints as H
+
+from repro.agents.agent import WorkloadAgent
+from repro.agents.policy import STATEFUL, AgentPolicy
+
+_EVICTION = H.PlatformEvent.EVICTION_NOTICE.value
+_THROTTLES = (H.PlatformEvent.THROTTLE_NOTICE.value,
+              H.PlatformEvent.UNDERCLOCK_NOTICE.value)
+_RESTORE = H.PlatformEvent.OVERCLOCK_OFFER.value
+_SCALE_UP = H.PlatformEvent.SCALE_UP_OFFER.value
+_SCALE_DOWN = H.PlatformEvent.SCALE_DOWN_NOTICE.value
+
+
+class TrainerAgent(WorkloadAgent):
+    """Per-VM agent for one data-parallel slice of a live trainer."""
+
+    def __init__(self, vm, endpoint, runtime, policy: AgentPolicy, tenant:
+                 "TrainerTenant"):
+        super().__init__(vm, endpoint, runtime, policy)
+        self.tenant = tenant
+        tenant.adopt(self)
+
+    def _on_event(self, event: Dict[str, Any]):
+        if self.dead:
+            return
+        kind = event.get("event")
+        if kind == _EVICTION:
+            self._on_eviction(event)
+        elif kind in _THROTTLES:
+            self.tenant.on_throttle(self, event)
+        elif kind == _RESTORE:
+            self.tenant.on_restore(self, event)
+        elif kind == _SCALE_UP:
+            self.tenant.on_scale_up(self, event)
+        elif kind == _SCALE_DOWN:
+            self.tenant.on_scale_down(self, event)
+
+    def _begin_checkpoint(self, event: Dict[str, Any]) -> float:
+        """The real emergency checkpoint happens NOW (params + opt state
+        are durable on disk before any consent); the base class schedules
+        the ack after the modeled write latency returned here, so the
+        platform sees checkpoint-then-ack in simulated time."""
+        ckpt_s = self.tenant.emergency_checkpoint(self)
+        now = self.rt.now()
+        kill_t = float(event.get("payload", {}).get(
+            "kill_t", now + float(event.get("deadline_s", 0.0))))
+        self.tenant.note_ack_margin(kill_t - (now + ckpt_s))
+        return ckpt_s
+
+    def on_killed(self, t: float) -> float:
+        self.dead = True
+        lost = max(0.0, t - self.last_ckpt_t)
+        self.tenant.on_vm_killed(self, lost)
+        return lost
+
+
+class TrainerTenant:
+    """Shared state for one training workload's agents: the trainer itself
+    and which accelerators each placed VM contributes."""
+
+    def __init__(self, workload: str, devices, devices_per_vm: int = 1,
+                 model_axis: int = 1, min_dp: int = 1,
+                 emergency_ckpt_s: float = 4.0):
+        self.workload = workload
+        self.devices_per_vm = max(1, int(devices_per_vm))
+        self.model_axis = max(1, int(model_axis))
+        self.min_dp = max(1, int(min_dp))
+        # FIXED modeled durable-write latency of the emergency checkpoint
+        # in sim seconds — the real save is instantaneous on the sim clock.
+        # Callers pick it for their timeline; the ai_training scenario
+        # reports the write bandwidth it implies for the trainer's real
+        # ``state_bytes()`` so the constant stays auditable.
+        self.emergency_ckpt_s = float(emergency_ckpt_s)
+        self.trainer = None
+        self.runtime = None
+        self.agents: Dict[str, TrainerAgent] = {}
+        self._order: List[str] = []             # adopt order: stable mapping
+        self._assigned: Dict[str, List] = {}    # vm -> base devices
+        self._extra: Dict[str, List] = {}       # vm -> harvest-granted
+        self._granted_cores: Dict[str, float] = {}
+        self._spare: List = list(devices)
+        self._paused = False
+        self._dirty = False                     # grow pending a step boundary
+        self._last_emergency = None             # (step, sim_t) coalescing key
+        self.metrics = defaultdict(float)
+
+    # -- wiring --------------------------------------------------------------
+    def policy(self, **kw) -> AgentPolicy:
+        """An ``AgentPolicy`` that constructs this tenant's agents."""
+        kw.setdefault("statefulness", STATEFUL)
+        kw.setdefault("scale_out_in", True)
+        return AgentPolicy(agent_factory=lambda vm, ep, rt, pol:
+                           TrainerAgent(vm, ep, rt, pol, self), **kw)
+
+    def attach_trainer(self, trainer):
+        """Hand over the (already built) trainer; it must be running on
+        exactly ``active_devices()``."""
+        self.trainer = trainer
+        self._dirty = False
+        self._paused = False
+
+    def adopt(self, agent: TrainerAgent):
+        if self.runtime is None:
+            self.runtime = agent.rt
+        vm_id = agent.vm.vm_id
+        if vm_id in self.agents:                # re-adopt: keep the mapping
+            self.agents[vm_id] = agent
+            return
+        self.agents[vm_id] = agent
+        self._order.append(vm_id)
+        take = min(self.devices_per_vm, len(self._spare))
+        self._assigned[vm_id] = [self._spare.pop(0) for _ in range(take)]
+        self._extra[vm_id] = []
+        self._granted_cores[vm_id] = 0.0
+        if take < self.devices_per_vm:
+            self.metrics["underfilled_adoptions"] += 1
+        self._dirty = True
+        self.metrics["vms_adopted"] += 1
+
+    # -- device bookkeeping --------------------------------------------------
+    def active_devices(self) -> List:
+        devs: List = []
+        for vm_id in self._order:
+            devs.extend(self._assigned[vm_id])
+            devs.extend(self._extra[vm_id])
+        return devs
+
+    def _refill(self):
+        """Top up underfilled live VMs (a replacement adopted while its
+        original still held the devices) from the spare pool."""
+        for vm_id in self._order:
+            want = self.devices_per_vm - len(self._assigned[vm_id])
+            while want > 0 and self._spare:
+                self._assigned[vm_id].append(self._spare.pop(0))
+                want -= 1
+                self._dirty = True
+
+    def _apply_devices(self):
+        self._dirty = False
+        if self.trainer is None:
+            return
+        ok = self.trainer.resize_to_devices(self.active_devices())
+        if ok and self._paused:
+            self._paused = False
+            self.metrics["resumes"] += 1
+        elif not ok:
+            # below the minimum mesh: hold the old state and stop stepping
+            # until replacements bring capacity back
+            if not self._paused:
+                self.metrics["pauses"] += 1
+            self._paused = True
+
+    def apply_pending(self):
+        """Enact any deferred device-map change (step boundaries call this;
+        tests may call it directly)."""
+        if self._dirty:
+            self._apply_devices()
+
+    # -- event reactions (called by TrainerAgent) ----------------------------
+    def emergency_checkpoint(self, agent: TrainerAgent) -> float:
+        """Durable checkpoint for an eviction notice; one real save covers
+        every notice of the same wave (same step, same sim instant).
+        Returns the modeled durable-write latency in sim seconds."""
+        now = self.runtime.now() if self.runtime else 0.0
+        key = (getattr(self.trainer, "step", 0), now)
+        if key != self._last_emergency:
+            self._last_emergency = key
+            if self.trainer is not None:
+                self.trainer.emergency_checkpoint()
+            self.metrics["emergency_checkpoints"] += 1
+        return self.emergency_ckpt_s
+
+    def on_vm_killed(self, agent: TrainerAgent, lost_s: float):
+        vm_id = agent.vm.vm_id
+        self.agents.pop(vm_id, None)
+        if vm_id in self._order:
+            self._order.remove(vm_id)
+        freed = self._assigned.pop(vm_id, []) + self._extra.pop(vm_id, [])
+        self._granted_cores.pop(vm_id, None)
+        self._spare.extend(freed)
+        self.metrics["vms_killed"] += 1
+        self.metrics["lost_work_s"] += lost_s
+        self._refill()
+        # kills apply eagerly: the dead VM's devices cannot keep training
+        self._apply_devices()
+
+    def _per_device_cores(self, vm) -> float:
+        return max(vm.cores / self.devices_per_vm, 1e-9)
+
+    def on_scale_up(self, agent: TrainerAgent, event: Dict[str, Any]):
+        """Harvest granted spare cores to this VM: convert whole-device
+        grants into extra DP capacity at the next step boundary."""
+        vm_id = agent.vm.vm_id
+        extra = float(event.get("payload", {}).get("extra_cores", 0.0))
+        if extra <= 0 or vm_id not in self._granted_cores:
+            return
+        self._granted_cores[vm_id] += extra
+        want = int(self._granted_cores[vm_id]
+                   // self._per_device_cores(agent.vm))
+        while len(self._extra[vm_id]) < want and self._spare:
+            self._extra[vm_id].append(self._spare.pop(0))
+            self._dirty = True
+            self.metrics["harvest_devices_granted"] += 1
+
+    def on_scale_down(self, agent: TrainerAgent, event: Dict[str, Any]):
+        """Harvest revoked cores: give granted devices back and ack."""
+        vm_id = agent.vm.vm_id
+        taken = float(event.get("payload", {}).get("cores", 0.0))
+        if vm_id not in self._granted_cores:
+            return
+        self._granted_cores[vm_id] = max(
+            0.0, self._granted_cores[vm_id] - taken)
+        want = int(self._granted_cores[vm_id]
+                   // self._per_device_cores(agent.vm))
+        while len(self._extra[vm_id]) > want:
+            self._spare.append(self._extra[vm_id].pop())
+            self._dirty = True
+            self.metrics["harvest_devices_revoked"] += 1
+        seq = event.get("seq")
+        if seq is not None:
+            agent.ep.ack_event(seq)
+
+    def on_throttle(self, agent: TrainerAgent, event: Dict[str, Any]):
+        """Oversubscription / power throttle: the whole job halves its
+        microbatch — compute shed, not p95 demand shed."""
+        self.metrics["throttle_notices"] += 1
+        if not self.metrics["throttled"]:
+            self.metrics["throttled"] = 1.0
+            if self.trainer is not None:
+                self.trainer.set_throttled(True)
+        seq = event.get("seq")
+        if seq is not None:
+            agent.ep.ack_event(seq)
+
+    def on_restore(self, agent: TrainerAgent, event: Dict[str, Any]):
+        if self.metrics["throttled"]:
+            self.metrics["throttled"] = 0.0
+            self.metrics["restores"] += 1
+            if self.trainer is not None:
+                self.trainer.set_throttled(False)
+
+    def note_ack_margin(self, margin_s: float):
+        """How much sim time the scheduled ack beats the kill deadline by
+        (negative: the ladder will win and the work rides to the kill)."""
+        if ("ack_margin_min_s" not in self.metrics
+                or margin_s < self.metrics["ack_margin_min_s"]):
+            self.metrics["ack_margin_min_s"] = margin_s
+
+    # -- stepping ------------------------------------------------------------
+    def note_durable(self):
+        """A periodic checkpoint just became durable: lost-work meters reset
+        for every live slice."""
+        now = self.runtime.now() if self.runtime else 0.0
+        for a in self.agents.values():
+            a.last_ckpt_t = now
+
+    def publish_runtime_hints(self, hints: Dict[str, Any]) -> bool:
+        """The trainer's per-step runtime hints go out through the leader
+        agent's guest channel (``WITrainer.hint_sink``)."""
+        if self.runtime is None:
+            return False
+        lead = next((a for a in self.agents.values()
+                     if self.runtime.is_leader(a)), None)
+        if lead is None:
+            lead = next(iter(self.agents.values()), None)
+        if lead is None or lead.dead:
+            return False
+        return lead.ep.set_runtime_hints(dict(hints))
+
+    @property
+    def paused(self) -> bool:
+        return self._paused
+
+    def run(self, n_steps: int, sim_s_per_step: float = 5.0,
+            max_sim_s: Optional[float] = None):
+        """Interleave real training steps with the platform's simulated
+        clock: every step advances the engine by ``sim_s_per_step`` (firing
+        scheduler ticks, notices, ladder kills, policy passes), applies any
+        deferred resize, then runs one real step."""
+        eng = self.runtime.engine
+        horizon = eng.clock.t + (max_sim_s if max_sim_s is not None
+                                 else 4.0 * n_steps * sim_s_per_step)
+        while self.trainer.step < n_steps and eng.clock.t < horizon:
+            eng.run(until=eng.clock.t + sim_s_per_step)
+            self.apply_pending()
+            if self._paused:
+                continue                # waiting for replacement capacity
+            self.trainer.step_once()
+            if self.trainer.step % self.trainer.ckpt_every == 0:
+                self.trainer.ckpt.wait()        # async write is durable now
+                self.note_durable()
+        self.trainer.ckpt.wait()
+        return self.trainer.metrics_log
+
+    def telemetry(self) -> Dict[str, float]:
+        out = dict(self.metrics)
+        out["vms_live"] = float(len(self.agents))
+        out["devices_active"] = float(len(self.active_devices()))
+        out["devices_spare"] = float(len(self._spare))
+        return out

@@ -1,9 +1,15 @@
-"""Fault / platform-event injection for runtime tests and examples.
+"""Fault / platform-event injection: the UNIT-TEST SHIM for trainer tests.
 
-Drives the SAME platform-hint path the real optimization managers use: the
-injector publishes EVICTION_NOTICE / SCALE_UP_OFFER / THROTTLE_NOTICE
-through the global manager, and the WI trainer reacts exactly as it would
-to a SpotManager or MADatacenterManager decision.
+Drives the same platform-hint *topic* the real optimization policies use —
+the injector publishes EVICTION_NOTICE / SCALE_UP_OFFER / THROTTLE_NOTICE
+through the global manager and the standalone-mode ``WITrainer`` reacts to
+them — but nothing here books eviction tickets, honors notice windows, or
+frees capacity.  The REAL path is the scheduler substrate: the
+``ai_training`` case study and ``agents.trainer_agent`` attach the trainer
+to VMs placed by ``repro.sched.Scheduler``, whose ``EvictionPipeline``
+produces these events with a deadline ladder and an ack -> early-release
+loop (see docs/ARCHITECTURE.md).  Keep this class for fast single-process
+tests (``tests/test_runtime_elastic.py``) and examples only.
 """
 from __future__ import annotations
 

@@ -16,6 +16,21 @@ The training job is a WI *workload*:
 Elasticity is real: the mesh is rebuilt over the surviving device set and
 params/opt state are resharded with device_put.  The data pipeline is
 stateless-per-step, so no sample is lost or repeated across resizes.
+
+The trainer runs in one of two modes:
+
+  * **standalone** (default, ``standalone=True``) — it owns a
+    ``LocalManager``/``VMEndpoint`` pair for a single synthetic VM and
+    drains platform events itself.  This is the unit-test path driven by
+    ``runtime.faults.FaultInjector``.
+  * **scheduler tenant** (``standalone=False``) — the training job's VMs
+    are placed, noticed, and killed by the real platform scheduler
+    (``repro.sched``), and ``repro.agents.trainer_agent.TrainerTenant``
+    owns the endpoints (one per placed VM, through the agent runtime) and
+    the VM->device mapping.  The tenant calls the public elastic surface
+    below (``emergency_checkpoint`` / ``resize_to_devices`` /
+    ``set_throttled`` / ``step_once``); runtime hints flow out through
+    ``hint_sink`` (wired to the leader agent's guest channel).
 """
 from __future__ import annotations
 
@@ -64,7 +79,9 @@ class WITrainer:
                  min_dp: int = 1, data_cfg: DataConfig = DataConfig(),
                  workload: str = "train-job", server: str = "rack0/host0",
                  batch_override: Optional[int] = None,
-                 seq_override: Optional[int] = None):
+                 seq_override: Optional[int] = None,
+                 standalone: bool = True,
+                 hint_sink: Optional[Callable[[Dict], None]] = None):
         self.rcfg, self.gm = rcfg, gm
         self.cfg: ModelConfig = rcfg.model
         self.workload = workload
@@ -84,12 +101,18 @@ class WITrainer:
         self.step = 0
         self._throttled = False
 
-        gm.register_workload(workload, deployment_hints_from(
-            rcfg, ckpt_every, elastic=True))
-        self.local = LocalManager(server, gm.bus, clock=gm.clock,
-                                  vm_hint_rate_per_s=1e6, vm_hint_burst=1e6)
-        self.endpoint: VMEndpoint = self.local.attach_vm("vm0", workload)
-        self.endpoint.on_event(self._on_platform_event)
+        self.hint_sink = hint_sink
+        self.local: Optional[LocalManager] = None
+        self.endpoint: Optional[VMEndpoint] = None
+        if standalone:
+            # legacy single-VM mode: the trainer owns its guest channel
+            gm.register_workload(workload, deployment_hints_from(
+                rcfg, ckpt_every, elastic=True))
+            self.local = LocalManager(server, gm.bus, clock=gm.clock,
+                                      vm_hint_rate_per_s=1e6,
+                                      vm_hint_burst=1e6)
+            self.endpoint = self.local.attach_vm("vm0", workload)
+            self.endpoint.on_event(self._on_platform_event)
         self._pending_events: List[Dict] = []
 
         self._build(self.devices)
@@ -176,11 +199,9 @@ class WITrainer:
                 self.endpoint.ack_event(e.get("seq", 0))
             elif kind in (H.PlatformEvent.THROTTLE_NOTICE.value,
                           H.PlatformEvent.UNDERCLOCK_NOTICE.value):
-                self._throttled = True
-                self._rebuild_same_devices()
+                self.set_throttled(True)
             elif kind == H.PlatformEvent.OVERCLOCK_OFFER.value:
-                self._throttled = False
-                self._rebuild_same_devices()
+                self.set_throttled(False)
 
     def _rebuild_same_devices(self):
         self._checkpoint(sync=True)
@@ -209,33 +230,92 @@ class WITrainer:
         self.opt_state = jax.device_put(
             jax.tree.map(np.asarray, self.opt_state), self.oshard)
 
+    # -- public elastic surface (scheduler-tenant mode) ----------------------
+    def emergency_checkpoint(self):
+        """Eviction notice: make the state durable *now* (sync save + join)
+        so the guest can ack the notice and hand the VM back early."""
+        self._checkpoint(sync=True)
+        self.ckpt.wait()
+        self.events_log.append({"kind": "emergency_checkpoint",
+                                "step": self.step})
+
+    def resize_to_devices(self, devices: Sequence) -> bool:
+        """Elastic resize onto an explicit device set (the tenant's VM ->
+        device mapping after a kill / replacement / harvest grant).  Returns
+        False — and leaves the current mesh untouched — when the set is too
+        small for even the minimum mesh; the caller pauses stepping until
+        capacity returns."""
+        devices = list(devices)
+        if len(devices) < self.min_dp * self.model_axis:
+            return False
+        # _build floors the mesh to dp*model_axis devices, so compare the
+        # usable prefix — an odd-sized set must not re-jit an identical mesh
+        dp = max(self.min_dp, len(devices) // self.model_axis)
+        if devices[: dp * self.model_axis] == self.active_devices:
+            return True
+        self._checkpoint(sync=True)
+        self.ckpt.wait()
+        self._build(devices)
+        self._reshard()
+        self.events_log.append({"kind": "resize", "step": self.step,
+                                "dp": self.dp,
+                                "devices": len(self.active_devices)})
+        return True
+
+    def set_throttled(self, on: bool):
+        """Platform throttle/underclock notice (or its clearing): halve the
+        microbatch (less compute per unit time) until the event clears."""
+        if bool(on) == self._throttled:
+            return
+        self._throttled = bool(on)
+        self._rebuild_same_devices()
+        self.events_log.append({"kind": "throttle" if on else "restore",
+                                "step": self.step})
+
+    def state_bytes(self) -> int:
+        """Checkpointable state size (params + optimizer), for modeling
+        checkpoint write latency in simulated time."""
+        leaves = jax.tree.leaves({"params": self.params,
+                                  "opt": self.opt_state})
+        return int(sum(np.asarray(l).nbytes for l in leaves))
+
     # -- runtime hints -----------------------------------------------------------
     def _publish_runtime_hints(self, step_ms: float):
         fresh = (self.step % self.ckpt_every) < max(1, self.ckpt_every // 4)
-        self.endpoint.set_runtime_hints({
+        hints = {
             "preemptibility_pct": 90.0 if fresh else 40.0,
             "x-step-time-ms": step_ms,
             "x-dp-width": self.dp,
-        })
+        }
+        if self.endpoint is not None:
+            self.endpoint.set_runtime_hints(hints)
+        elif self.hint_sink is not None:
+            self.hint_sink(hints)
         self.detector.record(f"host-dp{self.step % max(self.dp, 1)}", step_ms)
 
     # -- main loop -----------------------------------------------------------
+    def step_once(self) -> Dict:
+        """One training step on the current mesh (the tenant interleaves
+        these with the platform's simulated clock)."""
+        batch = {k: jax.device_put(v, self.bshard[k])
+                 for k, v in self.data.batch_at(self.step).items()}
+        t0 = time.perf_counter()
+        self.params, self.opt_state, metrics = self._train_step(
+            self.params, self.opt_state, batch)
+        loss = float(metrics["loss"])
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        self.step += 1
+        rec = {"step": self.step, "loss": loss, "dp": self.dp, "ms": dt_ms}
+        self.metrics_log.append(rec)
+        self._publish_runtime_hints(dt_ms)
+        if self.step % self.ckpt_every == 0:
+            self._checkpoint()
+        return rec
+
     def run(self, n_steps: int, step_callback: Optional[Callable] = None):
         while self.step < n_steps:
             self._drain_events()
-            batch = {k: jax.device_put(v, self.bshard[k])
-                     for k, v in self.data.batch_at(self.step).items()}
-            t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self._train_step(
-                self.params, self.opt_state, batch)
-            loss = float(metrics["loss"])
-            dt_ms = (time.perf_counter() - t0) * 1e3
-            self.step += 1
-            self.metrics_log.append({"step": self.step, "loss": loss,
-                                     "dp": self.dp, "ms": dt_ms})
-            self._publish_runtime_hints(dt_ms)
-            if self.step % self.ckpt_every == 0:
-                self._checkpoint()
+            self.step_once()
             if step_callback:
                 step_callback(self)
         self.ckpt.wait()

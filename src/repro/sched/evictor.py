@@ -135,10 +135,14 @@ class EvictionPipeline:
                                 source=source)
         self.tickets[vm.vm_id] = ticket
         self.gm.checker.note_eviction_pending(resource)
+        # kill_t / notice_s are guest-visible: a trainer agent uses the
+        # absolute deadline to judge whether its emergency checkpoint can
+        # finish (and the ack still count) before the ladder kill
         self.gm.publish_platform_hint(H.PlatformHint(
             event=H.PlatformEvent.EVICTION_NOTICE.value, workload=vm.workload,
             resource=resource, deadline_s=notice,
-            payload={"cores": vm.cores, "source": source},
+            payload={"cores": vm.cores, "source": source,
+                     "notice_s": notice, "kill_t": ticket.kill_t},
             source_opt="evictor"))
         notice_rec = {
             "event": "notice", "vm": vm.vm_id, "workload": vm.workload,

@@ -1,0 +1,274 @@
+"""Scenario: the elastic JAX trainer as a real scheduler tenant.
+
+The repo's two halves meet here.  A *real* ``WITrainer`` (jit-compiled
+training steps, sharded params, the atomic ``Checkpointer``) runs as one
+workload of the live platform scheduler, co-tenanted with the background
+fleet classes the savings scenarios use (stateless scale-out web frontends,
+harvest-elastic web, stateful batch).  Every platform interaction flows
+through the guest channel — VM endpoints, scheduled events, acks on
+``wi.events.acks`` — never a direct call into the pipeline:
+
+  * **spot/harvest reclaim** — ≥2 capacity-crunch waves pick harvest-tier
+    VMs first (Table 4), so each wave early-releases the harvest web
+    frontends and one or two trainer VMs.  A noticed trainer VM triggers a
+    real emergency checkpoint, an ack after the modeled durable-write
+    latency (early release well inside the hinted 60 s window), an eager
+    DP shrink over the surviving accelerators, and a replacement VM that
+    re-grows the width when it lands;
+  * **harvest growth** — ``SCALE_UP_OFFER`` grants convert spare
+    accelerators into extra DP ranks at the next step boundary;
+  * **power events** — an MA-datacenter power event on the leader's server
+    throttles the job (availability 2.0 ≤ 3): the microbatch halves; the
+    next policy pass's ``OVERCLOCK_OFFER`` restores it;
+  * the trainer's leader agent publishes per-step runtime hints
+    (``preemptibility_pct`` fresh/stale, ``x-step-time-ms``,
+    ``x-dp-width``) through its endpoint, which is what keeps the leader's
+    keep-priority above the other slices in victim selection.
+
+Invariants (asserted by the ``ai_training`` benchmark and the tenant
+tests): zero notice-window violations, ≥1 trainer early release via a
+guest ack, DP width shrinks then re-grows with finite/decreasing losses
+across the resizes, and lost work is bounded by one checkpoint interval
+per kill.
+
+Needs 8 virtual host devices — run as ``python -m
+repro.sim.casestudies.ai_training`` (the module sets ``XLA_FLAGS`` before
+importing jax) or from the benchmark harness's subprocess.  Sizes honor
+``AI_TRAINING_STEPS`` / ``AI_TRAINING_SERVERS``.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import json
+import random
+import tempfile
+from typing import Dict
+
+import jax
+
+from repro.agents import (STATEFUL, STATELESS, AgentPolicy, AgentRuntime,
+                          TrainerTenant)
+from repro.configs.archs import smoke_config
+from repro.configs.base import RunConfig
+from repro.runtime.trainer import WITrainer, deployment_hints_from
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+
+N_STEPS = 40
+MIN_STEPS = 24                  # the event timeline needs room to play out
+SIM_S_PER_STEP = 5.0            # sim seconds advanced per training step
+TICK_S = 15.0
+POLICY_PERIOD_S = 45.0
+CKPT_EVERY = 4                  # steps; cadence = CKPT_EVERY*SIM_S_PER_STEP
+N_SERVERS = 12
+CORES_PER_SERVER = 48.0
+
+WORKLOAD = "ai-train"
+N_TRAIN_VMS = 3
+TRAIN_VM_CORES = 4.0            # 2 cores per accelerator
+DEVICES_PER_VM = 2
+MODEL_AXIS = 2
+TRAIN_NOTICE_S = 60.0
+EMERGENCY_CKPT_S = 4.0          # modeled durable-write latency (sim s)
+
+N_WEBH_VMS = 6                  # harvest web: the pre-trainer reclaim tier
+N_WEB_WORKLOADS = 3
+N_WEB_VMS = 8
+N_BATCH_WORKLOADS = 2
+N_BATCH_VMS = 6
+
+# wave sizes: the harvest tier is reclaimed first (Table 4), ordered by
+# keep-priority — harvest web (keep 10) before trainer slices (keep 20)
+# before the leader (keep 60 once its runtime hints land).  24 harvest-web
+# cores, then into the trainer:
+WAVE1_CORES = N_WEBH_VMS * 4.0 + 2.0                     # 1 trainer VM
+WAVE2_CORES = N_WEBH_VMS * 4.0 + TRAIN_VM_CORES + 2.0    # 2 trainer VMs
+
+
+def _event_t(frac: float, horizon: float) -> float:
+    """An event instant just *after* a tick, so replacements wait for the
+    next tick and the DP shrink is visible for at least one step."""
+    return (int(frac * horizon) // int(TICK_S)) * TICK_S + 2.0
+
+
+def build(seed: int, n_servers: int):
+    rng = random.Random(seed)
+    devices = list(jax.devices())
+    need = N_TRAIN_VMS * DEVICES_PER_VM + 2
+    if len(devices) < need:
+        raise RuntimeError(
+            f"needs {need} host devices, got {len(devices)} — run via "
+            f"'python -m repro.sim.casestudies.ai_training' so XLA_FLAGS "
+            f"is set before jax initializes")
+    devices = devices[:need]
+
+    s = Scheduler(default_notice_s=30.0, policy_period_s=POLICY_PERIOD_S)
+    for i in range(n_servers):
+        s.cluster.add_server(f"region-0/s{i}", CORES_PER_SERVER,
+                             region="region-0")
+
+    policies: Dict[str, AgentPolicy] = {}
+
+    # harvest web: stateless scale-out, the tier every wave reclaims first
+    s.gm.register_workload("webh", {
+        "scale_out_in": True, "scale_up_down": True,
+        "preemptibility_pct": 90.0, "availability_nines": 3.0,
+        "delay_tolerance_ms": 5_000.0})
+    policies["webh"] = AgentPolicy(statefulness=STATELESS, scale_out_in=True)
+    vm_id = 0
+    for _ in range(N_WEBH_VMS):
+        s.submit(VM(f"vm{vm_id}", "webh", "", 4.0,
+                    util_p95=rng.uniform(0.30, 0.55), spot=True,
+                    harvest=True))
+        vm_id += 1
+
+    # plain spot web: stateless scale-out; power events evict them
+    # (availability 3.5 > 3 rules out throttling, preemptibility 90 >= 20)
+    for i in range(N_WEB_WORKLOADS):
+        w = f"web-{i}"
+        s.gm.register_workload(w, {
+            "scale_out_in": True, "preemptibility_pct": 90.0,
+            "availability_nines": 3.5, "delay_tolerance_ms": 5_000.0})
+        policies[w] = AgentPolicy(statefulness=STATELESS, scale_out_in=True)
+        for _ in range(N_WEB_VMS):
+            s.submit(VM(f"vm{vm_id}", w, "", 4.0,
+                        util_p95=rng.uniform(0.30, 0.55), spot=True))
+            vm_id += 1
+
+    # stateful batch: background load that checkpoints-then-drains
+    for i in range(N_BATCH_WORKLOADS):
+        w = f"batch-{i}"
+        s.gm.register_workload(w, {
+            "preemptibility_pct": 45.0, "availability_nines": 2.5,
+            "delay_tolerance_ms": 30_000.0, "x-eviction-notice-s": 120.0})
+        policies[w] = AgentPolicy(statefulness=STATEFUL,
+                                  state_gb=8.0 if i % 2 == 0 else 30.0,
+                                  ckpt_gbps=0.2)
+        for _ in range(N_BATCH_VMS):
+            s.submit(VM(f"vm{vm_id}", w, "", 8.0,
+                        util_p95=rng.uniform(0.2, 0.8), spot=True))
+            vm_id += 1
+
+    s.schedule_pending()                # the background fleet lands first
+
+    # the training job: WI hints straight from the trainer's own mapping,
+    # except region pinned — the dataset has gravity, and an unpinned
+    # trainer would be "migrated" toward the cheap region on every hint
+    # tick, resetting the per-resource keep-priority its leader maintains
+    cfg = smoke_config("minitron-8b")
+    rcfg = RunConfig(model=cfg, learning_rate=1e-3, warmup_steps=5,
+                     total_steps=max(N_STEPS, 200))
+    hints = deployment_hints_from(rcfg, CKPT_EVERY, elastic=True)
+    hints["region_independent"] = False
+    hints["x-eviction-notice-s"] = TRAIN_NOTICE_S
+    s.gm.register_workload(WORKLOAD, hints)
+    tenant = TrainerTenant(WORKLOAD, devices,
+                           devices_per_vm=DEVICES_PER_VM,
+                           model_axis=MODEL_AXIS, min_dp=1,
+                           emergency_ckpt_s=EMERGENCY_CKPT_S)
+    policies[WORKLOAD] = tenant.policy(state_gb=1.0, ckpt_gbps=0.25)
+    for i in range(N_TRAIN_VMS):
+        s.submit(VM(f"ai{i}", WORKLOAD, "", TRAIN_VM_CORES, util_p95=0.5,
+                    spot=True, harvest=True))
+    s.schedule_pending()                # trainer slices land on the spare
+    runtime = AgentRuntime(s, policies=policies)    # adopts trainer slices
+
+    trainer = WITrainer(rcfg, s.gm, ckpt_dir=tempfile.mkdtemp(),
+                        devices=tenant.active_devices(),
+                        model_axis=MODEL_AXIS, ckpt_every=CKPT_EVERY,
+                        min_dp=1, workload=WORKLOAD,
+                        batch_override=24, seq_override=32,
+                        standalone=False,
+                        hint_sink=tenant.publish_runtime_hints)
+    tenant.attach_trainer(trainer)
+    return s, runtime, tenant, trainer
+
+
+def run(seed: int = 0, n_steps: int = N_STEPS,
+        n_servers: int = N_SERVERS) -> Dict:
+    n_steps = max(int(n_steps), MIN_STEPS)
+    s, runtime, tenant, trainer = build(seed, n_servers)
+    horizon = n_steps * SIM_S_PER_STEP
+
+    for frac, cores in ((0.3, WAVE1_CORES), (0.6, WAVE2_CORES)):
+        s.engine.at(_event_t(frac, horizon),
+                    lambda c=cores: s.capacity_crunch("region-0", c))
+
+    def power_on_leader():
+        lead = next((v for v in tenant._order
+                     if s.cluster.vms.get(v) is not None
+                     and s.cluster.vms[v].server), None)
+        if lead is not None:
+            s.power_event(s.cluster.vms[lead].server, shed_frac=0.5)
+    s.engine.at(_event_t(0.45, horizon), power_on_leader)
+
+    # ticks must cover the tenant's full wait horizon (4x the nominal
+    # run): replacements only place on a tick, so a paused trainer could
+    # otherwise never recover once ticks end.  Ticks past the actual end
+    # of stepping just stay queued.
+    s.start(TICK_S, 4.0 * horizon)
+    tenant.run(n_steps, SIM_S_PER_STEP)
+
+    ev = s.evictor
+    tlog = [t for t in ev.log if t.workload == WORKLOAD]
+    early_all = [t for t in ev.log if t.outcome == "early_released"]
+    dps = [m["dp"] for m in trainer.metrics_log]
+    losses = [m["loss"] for m in trainer.metrics_log]
+    i_min = dps.index(min(dps)) if dps else 0
+    tm = tenant.telemetry()
+    rm = runtime.telemetry()
+    trainer_reclaims = sum(1 for t in tlog
+                           if t.outcome in ("killed", "early_released"))
+    out = {
+        "steps": trainer.step,
+        "waves": s.stats.get("capacity_crunches", 0),
+        "violations": len(ev.violations()),
+        "trainer_early_releases":
+            sum(1 for t in tlog if t.outcome == "early_released"),
+        "trainer_ladder_kills":
+            sum(1 for t in tlog if t.outcome == "killed"),
+        "fleet_early_releases": len(early_all) - sum(
+            1 for t in tlog if t.outcome == "early_released"),
+        "dp0": dps[0] if dps else 0,
+        "dp_min": min(dps) if dps else 0,
+        "dp_regrown": max(dps[i_min:]) if dps else 0,
+        "dp_final": dps[-1] if dps else 0,
+        "resizes": sum(1 for e in trainer.events_log
+                       if e["kind"] == "resize"),
+        "emergency_checkpoints": tm.get("emergency_checkpoints", 0.0),
+        "harvest_devices_granted": tm.get("harvest_devices_granted", 0.0),
+        "throttles": tm.get("throttle_notices", 0.0),
+        "restores": tm.get("restores", 0.0),
+        "microbatch_final": trainer.pcfg.microbatch,
+        "microbatch_throttled": sum(1 for e in trainer.events_log
+                                    if e["kind"] == "throttle"),
+        "ack_margin_min_s": tm.get("ack_margin_min_s", float("nan")),
+        # the real checkpointed state behind the modeled 4 s write latency
+        "ckpt_state_mb": trainer.state_bytes() / 1e6,
+        "implied_ckpt_write_gbps":
+            trainer.state_bytes() / 1e9 / EMERGENCY_CKPT_S,
+        "lost_work_s": tm.get("lost_work_s", 0.0),
+        "trainer_reclaims": trainer_reclaims,
+        "ckpt_interval_s": CKPT_EVERY * SIM_S_PER_STEP,
+        "replacements_placed": rm.get("replacements_placed", 0.0),
+        "fleet_lost_work_s_stateless": rm.get("lost_work_s_stateless", 0.0),
+        "loss_first3": sum(losses[:3]) / max(len(losses[:3]), 1),
+        "loss_last3": sum(losses[-3:]) / max(len(losses[-3:]), 1),
+        "losses_finite": all(l == l and abs(l) != float("inf")
+                             for l in losses),
+    }
+    s.gm.close()        # scenario teardown: release WAL/segment handles
+    return out
+
+
+if __name__ == "__main__":
+    n_steps = int(os.environ.get("AI_TRAINING_STEPS", N_STEPS))
+    n_servers = int(os.environ.get("AI_TRAINING_SERVERS", N_SERVERS))
+    result = run(seed=0, n_steps=n_steps, n_servers=n_servers)
+    for k, v in result.items():
+        print(f"{k}: {v}")
+    print("RESULT " + json.dumps(result))

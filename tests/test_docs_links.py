@@ -1,0 +1,46 @@
+"""Docs link check: every relative link in the markdown docs resolves.
+
+Run standalone by the CI docs-link-check step::
+
+    PYTHONPATH=src python -m pytest tests/test_docs_links.py -q
+
+Scope: ``*.md`` at the repo root plus ``docs/``.  External links
+(``http(s)://``) and pure anchors (``#...``) are out of scope; relative
+targets may carry an anchor, which is stripped before the existence check.
+"""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files():
+    return sorted(ROOT.glob("*.md")) + sorted((ROOT / "docs").glob("*.md"))
+
+
+def relative_links(path: Path):
+    for m in _LINK.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        yield target.split("#", 1)[0]
+
+
+def test_docs_exist():
+    names = {p.name for p in md_files()}
+    assert "README.md" in names
+    assert (ROOT / "docs" / "ARCHITECTURE.md").exists()
+    assert (ROOT / "docs" / "HINTS.md").exists()
+
+
+@pytest.mark.parametrize("md", md_files(), ids=lambda p: str(p.relative_to(
+    ROOT)))
+def test_relative_md_links_resolve(md):
+    broken = []
+    for target in relative_links(md):
+        if not (md.parent / target).exists():
+            broken.append(target)
+    assert not broken, f"{md.relative_to(ROOT)} has broken links: {broken}"
