@@ -6,10 +6,21 @@ quantity compared against the paper's value where applicable).
     PYTHONPATH=src python -m benchmarks.run [--only t1_survey,...]
     PYTHONPATH=src python -m benchmarks.run --only sched_scale,sched_scale_xl \
         --json BENCH_sched.json
+    PYTHONPATH=src python -m benchmarks.run --profile sched_scale_xl \
+        --json BENCH_sched.json
 
 ``--json PATH`` additionally writes the scheduler-scale metrics
 (placements/s, eviction counts, violation counts) as JSON so the perf
-trajectory is tracked across PRs (committed as ``BENCH_sched.json``).
+trajectory is tracked across PRs (committed as ``BENCH_sched.json``),
+plus a ``_meta`` entry (git sha, date, python, env size knobs) so a
+number can always be traced back to the configuration that produced it.
+
+``--profile NAMES`` arms the process-wide flight recorder
+(``repro.obs.Tracer``) for the named benchmarks (they are added to the
+run set): each writes a Chrome/Perfetto trace to
+``traces/<name>.trace.json`` (open at https://ui.perfetto.dev) and its
+JSON entry gains a ``profile`` block with the per-phase wall-clock
+breakdown.  See docs/OBSERVABILITY.md.
 
 Scheduler-scale benchmark sizes honor env overrides (used by the CI smoke
 job to run a reduced configuration): ``SCHED_SCALE_SERVERS``,
@@ -182,6 +193,11 @@ def e2e_savings():
         "replacements_placed": r["replacements_placed"],
         "defrag_migrations": r["defrag_migrations"],
         "reconcile_abs_diff": r["reconcile_abs_diff"],
+        "obs_reconcile_ok": r["obs_reconcile_ok"],
+        "obs_violations": r["obs_violations"],
+        "obs_max_notice_s": r["obs_max_notice_s"],
+        "obs_notice_to_ack_p100_s": r["obs_notice_to_ack_p100_s"],
+        "obs_acks_observed": r["obs_acks_observed"],
     }
     return us, (f"saving={r['saving']:.3f}(paper=0.488,"
                 f"err={r['abs_err_vs_paper']:.4f}),"
@@ -197,11 +213,18 @@ def _sched_scale_run(name, n_servers, cores, n_vms, n_workloads, regions,
     ``n_servers`` across ``regions``, report placement throughput, then
     survive an eviction storm with every hinted notice window honored."""
     import random
+    from repro import obs
     from repro.sched import Scheduler
     from repro.sim.cluster import VM, Region
     from repro.sim.workload import sample_population
 
-    s = Scheduler(publish_decisions=True)
+    # a live registry + bus-fed lifecycle observer ride along (pull-based
+    # collectors and one dict dispatch per batched record — nothing on the
+    # timed placement path); the tracer stays the process default, so
+    # spans only record under --profile
+    registry = obs.MetricsRegistry(enabled=True)
+    s = Scheduler(publish_decisions=True, metrics=registry)
+    observer = obs.LifecycleObserver(s.gm.bus, registry=registry)
     for j, r in enumerate(regions):
         if r not in s.cluster.regions:
             s.cluster.add_region(Region(r, price=0.85 + 0.05 * j,
@@ -243,6 +266,14 @@ def _sched_scale_run(name, n_servers, cores, n_vms, n_workloads, regions,
     assert placed >= int(0.95 * n_vms), f"only placed {placed}/{n_vms}"
     assert violations == 0, f"{violations} notice violations"
     kills = s.evictor.stats["kills"]
+    # the bus-derived lifecycle books must match the pipeline's own, and
+    # the histograms must respect the protocol: no kill leads under the
+    # hinted window already asserted above, and the derived violation
+    # count agrees with violations()
+    life = observer.summary()
+    recon = observer.reconcile(s.evictor)
+    assert recon["ok"], recon["diffs"]
+    assert life["violations"] == violations, (life["violations"], violations)
     JSON_METRICS[name] = {
         "servers": n_servers, "vms": n_vms, "regions": len(regions),
         "placed": placed, "placement_seconds": round(dt, 4),
@@ -252,6 +283,14 @@ def _sched_scale_run(name, n_servers, cores, n_vms, n_workloads, regions,
         "storm_cancellations": s.evictor.stats.get("cancellations", 0),
         "min_lead_time_s": (None if s.evictor.min_lead_time_s() == float("inf")
                             else s.evictor.min_lead_time_s()),
+        "lifecycle": {
+            "reconcile_ok": recon["ok"],
+            "violations": int(life["violations"]),
+            "notices": int(life["notices"]),
+            "max_notice_s": life["max_notice_s"],
+            "kill_lead_s": life["kill_lead_s"],
+            "notice_to_ack_s": life["notice_to_ack_s"],
+        },
     }
     return dt * 1e6, (f"placed={placed}/{n_vms},servers={n_servers},"
                       f"placements_per_s={rate:.0f},"
@@ -357,6 +396,11 @@ def agents_diurnal():
         "replacement_lead_s_mean": round(r["replacement_lead_s_mean"], 2),
         "hint_adaptations": r["hint_adaptations"],
         "hint_migrations": r["hint_migrations"],
+        "obs_reconcile_ok": r["obs_reconcile_ok"],
+        "obs_violations": r["obs_violations"],
+        "obs_max_notice_s": r["obs_max_notice_s"],
+        "obs_notice_to_ack_p100_s": r["obs_notice_to_ack_p100_s"],
+        "obs_acks_observed": r["obs_acks_observed"],
     }
     return us, (f"early_frac={r['early_release_frac']:.2f},"
                 f"killed={r['evictions_killed']},"
@@ -411,6 +455,11 @@ def ai_training():
         "lost_work_s": r["lost_work_s"],
         "ckpt_interval_s": r["ckpt_interval_s"],
         "throttles": r["throttles"], "restores": r["restores"],
+        "obs_reconcile_ok": r["obs_reconcile_ok"],
+        "obs_violations": r["obs_violations"],
+        "obs_max_notice_s": r["obs_max_notice_s"],
+        "obs_notice_to_ack_p100_s": r["obs_notice_to_ack_p100_s"],
+        "obs_acks_observed": r["obs_acks_observed"],
     }
     return us, (f"dp={r['dp0']}->{r['dp_min']}->{r['dp_regrown']},"
                 f"early={r['trainer_early_releases']},"
@@ -433,6 +482,39 @@ def sched_scenarios():
                 f"crunch_migrations={crunch['defrag_migrations']}")
 
 
+_SIZE_KNOBS = ("SCHED_SCALE_SERVERS", "SCHED_SCALE_VMS",
+               "SCHED_SCALE_XL_SERVERS", "SCHED_SCALE_XL_VMS",
+               "AGENTS_DIURNAL_SERVERS", "AGENTS_DIURNAL_VM_SCALE",
+               "E2E_SAVINGS_WORKLOADS", "E2E_SAVINGS_SERVERS",
+               "AI_TRAINING_STEPS", "AI_TRAINING_SERVERS")
+
+
+def _run_meta() -> dict:
+    """Provenance for --json output: enough to reproduce the run the
+    numbers came from (git sha + dirty marker, date, interpreter, the env
+    size knobs in effect, the exact argv)."""
+    import platform
+    import subprocess
+    meta = {
+        "date_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "argv": sys.argv[1:],
+        "env": {k: os.environ[k] for k in _SIZE_KNOBS if k in os.environ},
+    }
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip()
+        dirty = subprocess.run(["git", "status", "--porcelain"],
+                               capture_output=True, text=True,
+                               timeout=10).stdout.strip()
+        meta["git_sha"] = (sha + ("-dirty" if dirty else "")) if sha else None
+    except Exception:   # noqa: BLE001 — provenance is best-effort
+        meta["git_sha"] = None
+    return meta
+
+
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
        s62_microservices, s63_videoconf, f5_savings, e2e_savings,
        sched_scale, sched_scale_xl, sched_scenarios, agents_diurnal,
@@ -448,29 +530,66 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write scheduler-scale metrics (BENCH_sched.json)")
+    ap.add_argument("--profile", default=None, metavar="NAMES",
+                    help="comma list of benchmarks to run with the flight "
+                         "recorder armed; each writes "
+                         "traces/<name>.trace.json (Perfetto) and adds a "
+                         "per-phase breakdown to its --json entry")
+    ap.add_argument("--trace-dir", default="traces",
+                    help="where --profile writes trace files")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else None
-    if names is not None:
-        valid = {fn.__name__ for fn in ALL}
-        unknown = [n for n in names if n not in valid]
+    profile = set(args.profile.split(",")) if args.profile else set()
+    valid = {fn.__name__ for fn in ALL}
+    for label, requested in (("benchmark", names or []),
+                             ("profile", sorted(profile))):
+        unknown = [n for n in requested if n not in valid]
         if unknown:
-            ap.error(f"unknown benchmark name(s) {', '.join(unknown)}; "
+            ap.error(f"unknown {label} name(s) {', '.join(unknown)}; "
                      f"valid names: {', '.join(sorted(valid))}")
+    if profile:
+        os.makedirs(args.trace_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
     for fn in ALL:
         if names is not None:
-            if fn.__name__ not in names:
+            if fn.__name__ not in names and fn.__name__ not in profile:
                 continue
-        elif fn.__name__ in DEFAULT_SKIP:
+        elif fn.__name__ in DEFAULT_SKIP and fn.__name__ not in profile:
             continue
+        profiled = fn.__name__ in profile
+        if profiled:
+            # arm the process-wide flight recorder: schedulers constructed
+            # inside the benchmark bind it automatically
+            from repro import obs
+            tracer = obs.Tracer(capacity=131_072)
+            prev_tracer = obs.set_default_tracer(tracer)
         try:
             us, derived = fn()
             print(f"{fn.__name__},{us:.1f},{derived}", flush=True)
         except Exception as e:   # noqa: BLE001 — report and continue
             failed.append(fn.__name__)
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}", flush=True)
+        finally:
+            if profiled:
+                obs.set_default_tracer(prev_tracer)
+        if profiled:
+            trace_file = os.path.join(args.trace_dir,
+                                      f"{fn.__name__}.trace.json")
+            tracer.write(trace_file, process_name=f"wi-{fn.__name__}")
+            JSON_METRICS.setdefault(fn.__name__, {})["profile"] = {
+                "trace_file": trace_file,
+                "events": tracer.recorded,
+                "dropped": tracer.dropped,
+                "phase_breakdown": {
+                    k: {m: round(v, 6) for m, v in row.items()}
+                    for k, row in sorted(
+                        tracer.phase_breakdown().items())},
+            }
+            print(f"# wrote {trace_file} ({tracer.recorded} spans, "
+                  f"{tracer.dropped} dropped)", file=sys.stderr)
     if args.json is not None:
+        JSON_METRICS["_meta"] = _run_meta()
         with open(args.json, "w") as fh:
             json.dump(JSON_METRICS, fh, indent=2, sort_keys=True)
             fh.write("\n")

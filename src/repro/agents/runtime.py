@@ -13,9 +13,9 @@ deadline the replacement was running) is recorded when it lands.
 """
 from __future__ import annotations
 
-from collections import defaultdict
 from typing import Dict, Optional
 
+from repro import obs
 from repro.core import hints as H
 from repro.core.local_manager import LocalManager
 from repro.sim.cluster import VM
@@ -28,7 +28,8 @@ class AgentRuntime:
     def __init__(self, scheduler, policies: Optional[Dict[str, AgentPolicy]]
                  = None, default_policy: Optional[AgentPolicy] = None,
                  vm_hint_rate_per_s: float = 10.0,
-                 vm_hint_burst: float = 50.0):
+                 vm_hint_burst: float = 50.0,
+                 registry=None):
         self.sched = scheduler
         self.gm = scheduler.gm
         self.engine = scheduler.engine
@@ -43,7 +44,14 @@ class AgentRuntime:
         self._repl_pending: Dict[str, float] = {}
         self._repl_seq = 0
         self.phase = "peak"
-        self.metrics = defaultdict(float)
+        # defaultdict(float) semantics preserved (MetricDict's internal
+        # float dict is the source of truth) with every key mirrored into
+        # a registry gauge; defaults to the scheduler's registry, so agent
+        # counters land next to the scheduler's own series
+        self.registry = registry if registry is not None \
+            else scheduler.metrics
+        self.metrics = obs.MetricDict(self.registry, prefix="wi_agents_")
+        self.registry.add_collector("agents", self.telemetry)
         self.cluster.kill_listeners.append(self._on_vm_killed)
         self.gm.bus.subscribe(H.TOPIC_SCHED_DECISIONS, self._on_decisions)
         self.gm.bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction_record)

@@ -53,6 +53,7 @@ class Bus:
         self._subs: Dict[str, List[Callable[[Record], None]]] = {}
         self._lock = threading.RLock()
         self._clock = clock or (lambda: 0.0)
+        self.published = 0      # records ever appended (all topics)
         self._dir = Path(durable_dir) if durable_dir else None
         # segment file handles stay open across publishes (reopening the
         # append fd per record dominated durable publish cost)
@@ -131,6 +132,7 @@ class Bus:
             p = self._partition_for(key)
             ts = self._clock()
             off = parts[p].append(key, value, ts)
+            self.published += 1
             if self._dir:
                 fh = self._segment_handle(topic, p)
                 fh.write(json.dumps({"k": key, "v": value, "ts": ts}) + "\n")
@@ -176,6 +178,7 @@ class Bus:
                 acks.append((p, off))
                 if recs is not None:
                     recs.append(Record(topic, p, off, key, value, ts))
+            self.published += len(acks)
             for p, lines in pending_io.items():
                 fh = self._segment_handle(topic, p)
                 fh.write("\n".join(lines) + "\n")
@@ -230,6 +233,11 @@ class Bus:
             self._groups[(topic, group)] = {i: 0 for i in range(self._n)}
 
     # -- introspection -------------------------------------------------------
+    def topics(self) -> List[str]:
+        """Topics that exist (published to or subscribed on), sorted."""
+        with self._lock:
+            return sorted(self._topics)
+
     def end_offsets(self, topic: str) -> Dict[int, int]:
         with self._lock:
             return {i: len(p.log) for i, p in enumerate(self._topic(topic))}

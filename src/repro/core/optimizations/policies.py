@@ -61,6 +61,11 @@ class OptimizationPolicy(OptimizationManager):
 
     def bind(self, sched) -> "OptimizationPolicy":
         self.sched = sched
+        # pull-based exposition: per-policy stats dicts show up under
+        # snapshot()["collected"]["policy.<name>"] with zero hot-path cost
+        # (no-op on the default disabled registry)
+        sched.metrics.add_collector(f"policy.{self.name}",
+                                    lambda: dict(self.stats))
         return self
 
     def on_tick(self, now: float) -> List[Action]:

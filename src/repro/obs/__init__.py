@@ -1,0 +1,65 @@
+"""Fleet observability: metrics registry, tick-phase tracing, lifecycle
+latency histograms (docs/OBSERVABILITY.md).
+
+Three zero-dependency pillars:
+
+  * :mod:`repro.obs.metrics` — ``MetricsRegistry`` (counters, gauges,
+    fixed-bucket histograms, labels, Prometheus text exposition);
+  * :mod:`repro.obs.trace` — ``Tracer``, a ring-buffer flight recorder
+    with Chrome/Perfetto ``trace_event`` export and per-phase breakdowns;
+  * :mod:`repro.obs.lifecycle` — ``LifecycleObserver``, bus-fed
+    notice→ack / ack→release / kill-lead-time histograms reconciled
+    against the eviction pipeline's books.
+
+The scheduler and eviction pipeline instrument against the *process-wide
+defaults* below, both of which start **disabled** (shared no-op
+instruments, no allocation), so the hot path costs nothing until a
+scenario or ``benchmarks/run.py --profile`` opts in via
+``set_default_tracer`` / ``set_default_registry`` — or passes explicit
+``tracer=`` / ``metrics=`` arguments.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (DEFAULT_BUCKETS, Counter, Gauge, Histogram,
+                               MetricDict, MetricsRegistry, NULL_INSTRUMENT)
+from repro.obs.trace import NULL_SPAN, Tracer
+from repro.obs.lifecycle import (LIFECYCLE_BUCKETS, LifecycleObserver,
+                                 default_classify)
+
+_default_registry = MetricsRegistry(enabled=False)
+_default_tracer = Tracer(capacity=1, enabled=False)
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry (disabled unless a scenario swapped it)."""
+    return _default_registry
+
+
+def set_default_registry(registry: MetricsRegistry) -> MetricsRegistry:
+    """Swap the process-wide registry; returns the previous one.  Only
+    schedulers constructed *after* the swap pick it up (instruments are
+    bound at construction)."""
+    global _default_registry
+    prev, _default_registry = _default_registry, registry
+    return prev
+
+
+def default_tracer() -> Tracer:
+    """The process-wide tracer (disabled unless profiling swapped it)."""
+    return _default_tracer
+
+
+def set_default_tracer(tracer: Tracer) -> Tracer:
+    """Swap the process-wide tracer; returns the previous one."""
+    global _default_tracer
+    prev, _default_tracer = _default_tracer, tracer
+    return prev
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricDict", "MetricsRegistry",
+    "Tracer", "LifecycleObserver", "default_classify",
+    "DEFAULT_BUCKETS", "LIFECYCLE_BUCKETS", "NULL_INSTRUMENT", "NULL_SPAN",
+    "default_registry", "set_default_registry",
+    "default_tracer", "set_default_tracer",
+]

@@ -1,0 +1,314 @@
+"""Bus-fed lifecycle latency histograms for the eviction protocol.
+
+Observability pillar 3 (see docs/OBSERVABILITY.md).  A ``LifecycleObserver``
+subscribes to the authoritative record streams —
+
+  * ``wi.sched.evictions`` — notice / evicted / early_released / cancelled /
+    already_gone records from the ``EvictionPipeline``;
+  * ``wi.events.acks`` — guest acks fanned in by local managers;
+  * ``wi.sched.decisions`` — batched placement/migration/defrag records —
+
+and derives, per workload class (labels from a pluggable classifier,
+default: strip the trailing replica index, so ``web-3`` and ``web-7`` are
+both class ``web``):
+
+  * ``wi_lifecycle_notice_to_ack_s``   — notice issued -> guest ack;
+  * ``wi_lifecycle_ack_to_release_s``  — guest ack -> early release enacted;
+  * ``wi_lifecycle_kill_lead_s``       — achieved lead time of ladder kills;
+  * outcome counters (``wi_lifecycle_events_total{event=...}``), a
+    late-ack / notice-window-violation counter, and queue-depth gauges
+    (notices outstanding, decision-batch backlog).
+
+The observer is *derived* truth reconciled against the pipeline's own
+books — ``reconcile(pipeline)`` diffs its counters against
+``EvictionPipeline.stats`` / ``violations()`` and must come back clean
+(asserted by the scenario runs, tests, and the CI bench-smoke job) — so
+the histograms are cross-checked, not a second opinion.
+
+Purely bus-fed: attaching one to a live scheduler costs its subscribers
+one dict dispatch per record, nothing on the placement hot path (decision
+records are already batched: one record per drain).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional
+
+from repro.core import hints as H
+
+from repro.obs.metrics import MetricsRegistry
+
+# "web-3" -> "web", "bigdata-0.r12" -> "bigdata", "fleet-17.as2" -> "fleet"
+_CLASS_RE = re.compile(r"([.-]\d+|\.(r|as)\d+)+$")
+
+# Buckets sized for protocol latencies: sub-second ack turnarounds up
+# through the multi-minute notice windows.
+LIFECYCLE_BUCKETS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 30.0, 45.0, 60.0,
+                     90.0, 120.0, 180.0, 300.0, 600.0)
+
+
+def default_classify(workload: str) -> str:
+    """Workload name -> workload class (replica/clone suffixes stripped)."""
+    return _CLASS_RE.sub("", workload) or workload
+
+
+class LifecycleObserver:
+    def __init__(self, bus, registry: Optional[MetricsRegistry] = None,
+                 classify: Callable[[str], str] = default_classify):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(enabled=True)
+        self.classify = classify
+        # vm -> [t_notice, notice_s, workload_class, acked]; live notices
+        self._notices: Dict[str, list] = {}
+        self._acks: Dict[str, float] = {}       # vm -> t_ack (latest)
+        # release records can beat their own ack record to this observer
+        # (the scheduler's ack subscriber runs first and publishes the
+        # early_released record mid-dispatch): vm -> (t_release, note)
+        self._pending_release: Dict[str, tuple] = {}
+        self.max_notice_s = 0.0                 # widest hinted window seen
+        self.min_ack_margin_s = float("inf")    # notice_s - notice_to_ack
+        r = self.registry
+        self._outstanding = r.gauge(
+            "wi_lifecycle_notices_outstanding",
+            "eviction notices issued and not yet resolved")
+        self._backlog = r.gauge(
+            "wi_sched_decision_batch_n",
+            "size of the most recent decision batch per kind")
+        self._unsubs = [
+            bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction),
+            bus.subscribe(H.TOPIC_EVENT_ACKS, self._on_ack),
+            bus.subscribe(H.TOPIC_SCHED_DECISIONS, self._on_decisions),
+        ]
+
+    def close(self) -> None:
+        for unsub in self._unsubs:
+            try:
+                unsub()
+            except ValueError:
+                pass
+        self._unsubs = []
+
+    # -- instruments ---------------------------------------------------------
+    def _hist(self, name: str, help: str, cls: str):
+        return self.registry.histogram(name, help,
+                                       buckets=LIFECYCLE_BUCKETS,
+                                       workload_class=cls)
+
+    def _count(self, event: str, cls: str):
+        self.registry.counter(
+            "wi_lifecycle_events_total",
+            "eviction-protocol records by event and workload class",
+            event=event, workload_class=cls).inc()
+
+    # -- bus handlers --------------------------------------------------------
+    def _on_eviction(self, rec) -> None:
+        d = rec.value
+        if not isinstance(d, dict):
+            return
+        event = d.get("event")
+        vm = d.get("vm", "")
+        cls = self.classify(d.get("workload", ""))
+        if event == "notice":
+            t = float(d.get("t", 0.0))
+            notice_s = float(d.get("notice_s", 0.0))
+            self._notices[vm] = [t, notice_s, cls, False]
+            if notice_s > self.max_notice_s:
+                self.max_notice_s = notice_s
+            self._outstanding.inc()
+            self.registry.gauge("wi_lifecycle_notices_outstanding",
+                                workload_class=cls).inc()
+            self._count("notice", cls)
+            # an ack that raced ahead of the authoritative ticket (guest
+            # answered the manager's advisory notice) resolves at the same
+            # instant the ticket is booked
+            t_ack = self._acks.get(vm)
+            if t_ack is not None and t_ack >= t - 1e-9:
+                self._observe_ack(vm, t_ack)
+            return
+        if event in ("evicted", "early_released", "cancelled",
+                     "already_gone"):
+            self._count(event, cls)
+            note = self._notices.pop(vm, None)
+            if note is not None:
+                self._outstanding.dec()
+                self.registry.gauge("wi_lifecycle_notices_outstanding",
+                                    workload_class=note[2]).dec()
+            if event == "evicted":
+                lead = float(d.get("lead_time_s", -1.0))
+                notice_s = float(d.get("notice_s", 0.0))
+                self._hist("wi_lifecycle_kill_lead_s",
+                           "achieved eviction lead time (ladder kills)",
+                           cls).observe(lead)
+                if lead < notice_s - 1e-9:
+                    self.registry.counter(
+                        "wi_lifecycle_violations_total",
+                        "kills whose lead time undercut the hinted window",
+                        workload_class=cls).inc()
+            elif event == "early_released":
+                t_ack = self._acks.get(vm)
+                if t_ack is not None:
+                    self._hist("wi_lifecycle_ack_to_release_s",
+                               "guest ack -> early release enacted",
+                               cls).observe(
+                                   max(0.0, float(d.get("t", 0.0)) - t_ack))
+                elif note is not None and not note[3]:
+                    # the triggering ack record is still in flight behind
+                    # this release record: finish both histograms when it
+                    # lands (_on_ack)
+                    self._pending_release[vm] = (float(d.get("t", 0.0)),
+                                                 note)
+            self._acks.pop(vm, None)
+
+    def _on_ack(self, rec) -> None:
+        d = rec.value
+        if not isinstance(d, dict):
+            return
+        if d.get("event") != H.PlatformEvent.EVICTION_NOTICE.value:
+            return
+        vm = d.get("vm", "")
+        t_ack = float(d.get("t", 0.0))
+        pending = self._pending_release.pop(vm, None)
+        if pending is not None:
+            t_release, note = pending
+            self._observe_ack_note(note, t_ack)
+            self._hist("wi_lifecycle_ack_to_release_s",
+                       "guest ack -> early release enacted",
+                       note[2]).observe(max(0.0, t_release - t_ack))
+            return
+        self._acks[vm] = t_ack
+        if vm in self._notices:
+            self._observe_ack(vm, t_ack)
+
+    def _observe_ack(self, vm: str, t_ack: float) -> None:
+        self._observe_ack_note(self._notices[vm], t_ack)
+
+    def _observe_ack_note(self, note: list, t_ack: float) -> None:
+        t_notice, notice_s, cls, acked = note
+        if acked:               # duplicate ack for the same ticket
+            return
+        note[3] = True
+        dt = max(0.0, t_ack - t_notice)
+        self._hist("wi_lifecycle_notice_to_ack_s",
+                   "eviction notice issued -> guest ack", cls).observe(dt)
+        margin = notice_s - dt
+        if margin < self.min_ack_margin_s:
+            self.min_ack_margin_s = margin
+        if margin < -1e-9:
+            self.registry.counter(
+                "wi_lifecycle_late_acks_total",
+                "acks that arrived after the notice window expired",
+                workload_class=cls).inc()
+
+    def _on_decisions(self, rec) -> None:
+        d = rec.value
+        if not isinstance(d, dict):
+            return
+        kind = d.get("kind", "")
+        n = int(d.get("n", 0))
+        self.registry.counter(
+            "wi_sched_decisions_total",
+            "scheduler decision records by kind", kind=kind).inc(n)
+        self._backlog.set(n)
+        self.registry.gauge("wi_sched_decision_batch_n", kind=kind).set(n)
+
+    # -- aggregation ---------------------------------------------------------
+    def _counter_total(self, name: str, **match) -> float:
+        total = 0.0
+        for (kind, n, labels), inst in \
+                self.registry._instruments.items():
+            if kind != "Counter" or n != name:
+                continue
+            ld = dict(labels)
+            if all(ld.get(k) == v for k, v in match.items()):
+                total += inst.value
+        return total
+
+    def _hist_summary(self, name: str) -> Dict[str, float]:
+        """Pooled summary across every workload-class series of ``name``
+        (exact count/sum/min/max; percentiles from the merged buckets)."""
+        merged = None
+        for (kind, n, _labels), inst in \
+                list(self.registry._instruments.items()):
+            if kind != "Histogram" or n != name:
+                continue
+            if merged is None:
+                merged = {"count": 0, "sum": 0.0, "min": float("inf"),
+                          "max": float("-inf"),
+                          "buckets": [0] * len(inst.bucket_counts),
+                          "edges": inst.buckets}
+            merged["count"] += inst.count
+            merged["sum"] += inst.sum
+            merged["min"] = min(merged["min"], inst.min)
+            merged["max"] = max(merged["max"], inst.max)
+            for i, c in enumerate(inst.bucket_counts):
+                merged["buckets"][i] += c
+        if merged is None or merged["count"] == 0:
+            return {"count": 0}
+
+        def pct(q: float) -> float:
+            target = q / 100.0 * merged["count"]
+            seen, lo = 0, merged["min"]
+            for i, c in enumerate(merged["buckets"]):
+                if c == 0:
+                    continue
+                hi = (merged["edges"][i] if i < len(merged["edges"])
+                      else merged["max"])
+                hi = min(hi, merged["max"])
+                if seen + c >= target:
+                    frac = (target - seen) / c
+                    return max(merged["min"],
+                               min(merged["max"], lo + frac * (hi - lo)))
+                seen += c
+                lo = hi
+            return merged["max"]
+
+        return {"count": merged["count"], "sum": merged["sum"],
+                "min": merged["min"], "max": merged["max"],
+                "p50": pct(50), "p95": pct(95), "p99": pct(99),
+                "p100": merged["max"]}
+
+    def summary(self) -> Dict[str, Any]:
+        """Plain-dict rollup for scenario reports and BENCH_sched.json."""
+        return {
+            "notices": self._counter_total("wi_lifecycle_events_total",
+                                           event="notice"),
+            "killed": self._counter_total("wi_lifecycle_events_total",
+                                          event="evicted"),
+            "early_released": self._counter_total(
+                "wi_lifecycle_events_total", event="early_released"),
+            "cancelled": self._counter_total("wi_lifecycle_events_total",
+                                             event="cancelled"),
+            "already_gone": self._counter_total("wi_lifecycle_events_total",
+                                                event="already_gone"),
+            "violations": self._counter_total(
+                "wi_lifecycle_violations_total"),
+            "late_acks": self._counter_total("wi_lifecycle_late_acks_total"),
+            "outstanding": self._outstanding.value,
+            "max_notice_s": self.max_notice_s,
+            "min_ack_margin_s": (None if self.min_ack_margin_s == float(
+                "inf") else self.min_ack_margin_s),
+            "notice_to_ack_s": self._hist_summary(
+                "wi_lifecycle_notice_to_ack_s"),
+            "ack_to_release_s": self._hist_summary(
+                "wi_lifecycle_ack_to_release_s"),
+            "kill_lead_s": self._hist_summary("wi_lifecycle_kill_lead_s"),
+        }
+
+    def reconcile(self, pipeline) -> Dict[str, Any]:
+        """Diff the bus-derived books against the ``EvictionPipeline``'s
+        own.  ``ok`` must be True — the histograms above are only trusted
+        because this holds."""
+        s = self.summary()
+        truth = {
+            "notices": pipeline.stats.get("notices", 0),
+            "killed": pipeline.stats.get("kills", 0),
+            "early_released": pipeline.stats.get("early_releases", 0),
+            "cancelled": pipeline.stats.get("cancellations", 0),
+            "already_gone": pipeline.stats.get("already_gone", 0),
+            "violations": len(pipeline.violations()),
+        }
+        diffs = {k: (s[k], truth[k]) for k in truth if s[k] != truth[k]}
+        outstanding_truth = len(pipeline.tickets)
+        if s["outstanding"] != outstanding_truth:
+            diffs["outstanding"] = (s["outstanding"], outstanding_truth)
+        return {"ok": not diffs, "diffs": diffs}

@@ -1,0 +1,365 @@
+"""Metrics registry: counters, gauges, fixed-bucket latency histograms.
+
+Zero-dependency observability pillar 1 (see docs/OBSERVABILITY.md).  A
+``MetricsRegistry`` hands out instruments keyed by ``(name, labels)``:
+
+  * ``Counter`` — monotonically increasing totals (``inc``);
+  * ``Gauge`` — point-in-time values that move both ways (``set``/``inc``);
+  * ``Histogram`` — fixed-bucket latency distributions with exact min/max
+    and bucket-interpolated p50/p95/p99 (``observe``/``percentile``).
+
+Labels are plain dicts (``region``, ``workload_class``, ``policy``, ...);
+``instrument.labels(region="r0")`` returns the sibling series.  The whole
+registry exports two ways: ``snapshot()`` — a plain nested dict — and
+``render_prometheus()`` — Prometheus text exposition.
+
+**Disabled registries are provably near-zero-cost**: every instrument
+request returns the *same* shared ``NULL_INSTRUMENT`` singleton whose
+methods are empty one-liners (no allocation, no dict lookup beyond the
+early return), collectors never register, and snapshots are empty.  The
+scheduler hot path instruments against the process-wide default registry,
+which starts disabled, so ``sched_scale`` placement throughput does not
+regress unless a scenario opts in (``set_default_registry`` or explicit
+``metrics=`` arguments).
+
+Increments are not atomic across threads (the sim is single-threaded per
+engine); instrument *creation* is lock-protected so concurrent scenarios
+sharing a registry stay safe.
+"""
+from __future__ import annotations
+
+import threading
+from bisect import bisect_left
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+# Default latency buckets (seconds): sub-ms scheduler phases up through the
+# multi-minute notice windows the eviction ladder hands out.
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0, 300.0, 600.0)
+
+
+def _series_key(name: str, labels: Optional[Dict[str, Any]]) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class _NullInstrument:
+    """Shared no-op stand-in for every instrument of a disabled registry.
+
+    One singleton serves every name/label combination — identity is the
+    proof that the disabled path allocates nothing per call site.
+    """
+    __slots__ = ()
+
+    def inc(self, amount: float = 1.0) -> None:
+        pass
+
+    def dec(self, amount: float = 1.0) -> None:
+        pass
+
+    def set(self, value: float) -> None:
+        pass
+
+    def observe(self, value: float) -> None:
+        pass
+
+    def labels(self, **labels) -> "_NullInstrument":
+        return self
+
+    @property
+    def value(self) -> float:
+        return 0.0
+
+    @property
+    def count(self) -> int:
+        return 0
+
+
+NULL_INSTRUMENT = _NullInstrument()
+
+
+class _Instrument:
+    __slots__ = ("name", "help", "label_values", "_registry")
+
+    def __init__(self, registry: "MetricsRegistry", name: str, help: str,
+                 label_values: Optional[Dict[str, Any]]):
+        self._registry = registry
+        self.name = name
+        self.help = help
+        self.label_values = dict(label_values or {})
+
+    def labels(self, **labels):
+        """The sibling series with ``labels`` merged in (cached by the
+        registry, so repeated lookups return the same object)."""
+        merged = dict(self.label_values)
+        merged.update(labels)
+        return self._registry._get(type(self), self.name, self.help, merged)
+
+    @property
+    def key(self) -> str:
+        return _series_key(self.name, self.label_values)
+
+
+class Counter(_Instrument):
+    __slots__ = ("value",)
+
+    def __init__(self, registry, name, help, label_values):
+        super().__init__(registry, name, help, label_values)
+        self.value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up; use a Gauge")
+        self.value += amount
+
+
+class Gauge(_Instrument):
+    __slots__ = ("value",)
+
+    def __init__(self, registry, name, help, label_values):
+        super().__init__(registry, name, help, label_values)
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = value
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.value -= amount
+
+
+class Histogram(_Instrument):
+    """Fixed-bucket histogram with exact count/sum/min/max.
+
+    ``percentile(q)`` interpolates linearly inside the bucket holding the
+    q-quantile observation, clamped to the exact observed [min, max] — so
+    ``percentile(100) == max`` and ``percentile(0) == min`` exactly.
+    """
+    __slots__ = ("buckets", "bucket_counts", "count", "sum", "min", "max")
+
+    def __init__(self, registry, name, help, label_values,
+                 buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        super().__init__(registry, name, help, label_values)
+        self.buckets = tuple(sorted(buckets))
+        self.bucket_counts = [0] * (len(self.buckets) + 1)  # last = +Inf
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, value: float) -> None:
+        self.bucket_counts[bisect_left(self.buckets, value)] += 1
+        self.count += 1
+        self.sum += value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+
+    def percentile(self, q: float) -> float:
+        """The q-th percentile (0..100) estimated from the buckets."""
+        if self.count == 0:
+            return float("nan")
+        target = q / 100.0 * self.count
+        seen = 0
+        lo = self.min
+        for i, n in enumerate(self.bucket_counts):
+            if n == 0:
+                continue
+            hi = self.buckets[i] if i < len(self.buckets) else self.max
+            hi = min(hi, self.max)
+            if seen + n >= target:
+                frac = (target - seen) / n
+                return max(self.min, min(self.max, lo + frac * (hi - lo)))
+            seen += n
+            lo = hi
+        return self.max
+
+    def summary(self) -> Dict[str, float]:
+        if self.count == 0:
+            return {"count": 0, "sum": 0.0}
+        return {"count": self.count, "sum": self.sum,
+                "min": self.min, "max": self.max,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99)}
+
+
+class MetricsRegistry:
+    """Process-local instrument store; see the module docstring."""
+
+    def __init__(self, enabled: bool = True,
+                 default_buckets: Tuple[float, ...] = DEFAULT_BUCKETS):
+        self.enabled = enabled
+        self.default_buckets = tuple(default_buckets)
+        self._lock = threading.Lock()
+        # (cls, name, frozenset(label items)) -> instrument
+        self._instruments: Dict[Tuple, _Instrument] = {}
+        self._buckets_by_name: Dict[str, Tuple[float, ...]] = {}
+        self._collectors: Dict[str, Callable[[], Dict]] = {}
+
+    # -- instrument handout --------------------------------------------------
+    def _get(self, cls, name: str, help: str,
+             labels: Optional[Dict[str, Any]]):
+        if not self.enabled:
+            return NULL_INSTRUMENT
+        key = (cls.__name__, name,
+               frozenset((labels or {}).items()))
+        inst = self._instruments.get(key)
+        if inst is None:
+            with self._lock:
+                inst = self._instruments.get(key)
+                if inst is None:
+                    if cls is Histogram:
+                        buckets = self._buckets_by_name.get(
+                            name, self.default_buckets)
+                        inst = Histogram(self, name, help, labels, buckets)
+                    else:
+                        inst = cls(self, name, help, labels)
+                    self._instruments[key] = inst
+        return inst
+
+    def counter(self, name: str, help: str = "", **labels) -> Counter:
+        return self._get(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "", **labels) -> Gauge:
+        return self._get(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Optional[Iterable[float]] = None,
+                  **labels) -> Histogram:
+        if buckets is not None and self.enabled:
+            self._buckets_by_name.setdefault(name, tuple(sorted(buckets)))
+        return self._get(Histogram, name, help, labels)
+
+    # -- pull-based collectors ----------------------------------------------
+    def add_collector(self, name: str, fn: Callable[[], Dict]) -> None:
+        """Register a zero-hot-path-cost stats source: ``fn`` is only
+        called at ``snapshot()`` time (e.g. an ``AdmissionController``'s
+        stats dict, bus topic depths).  No-op when disabled, so default
+        scheduler construction never accumulates collector references."""
+        if self.enabled:
+            self._collectors[name] = fn
+
+    # -- export --------------------------------------------------------------
+    def _by_kind(self):
+        out: Dict[str, List[_Instrument]] = {
+            "Counter": [], "Gauge": [], "Histogram": []}
+        for (kind, _n, _l), inst in sorted(self._instruments.items(),
+                                           key=lambda kv: kv[1].key):
+            out[kind].append(inst)
+        return out
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Plain-dict export of every series plus collector pulls."""
+        kinds = self._by_kind()
+        out: Dict[str, Any] = {
+            "counters": {i.key: i.value for i in kinds["Counter"]},
+            "gauges": {i.key: i.value for i in kinds["Gauge"]},
+            "histograms": {i.key: i.summary() for i in kinds["Histogram"]},
+        }
+        if self._collectors:
+            out["collected"] = {name: dict(fn())
+                                for name, fn in sorted(
+                                    self._collectors.items())}
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus text exposition (0.0.4 format)."""
+        lines: List[str] = []
+        kinds = self._by_kind()
+        seen_header = set()
+
+        def header(inst, typ):
+            if inst.name in seen_header:
+                return
+            seen_header.add(inst.name)
+            if inst.help:
+                lines.append(f"# HELP {inst.name} {inst.help}")
+            lines.append(f"# TYPE {inst.name} {typ}")
+
+        for inst in kinds["Counter"]:
+            header(inst, "counter")
+            lines.append(f"{inst.key} {inst.value}")
+        for inst in kinds["Gauge"]:
+            header(inst, "gauge")
+            lines.append(f"{inst.key} {inst.value}")
+        for inst in kinds["Histogram"]:
+            header(inst, "histogram")
+            cum = 0
+            for i, edge in enumerate(inst.buckets):
+                cum += inst.bucket_counts[i]
+                labels = dict(inst.label_values, le=repr(edge))
+                lines.append(
+                    f"{_series_key(inst.name + '_bucket', labels)} {cum}")
+            labels = dict(inst.label_values, le="+Inf")
+            lines.append(
+                f"{_series_key(inst.name + '_bucket', labels)} {inst.count}")
+            lines.append(
+                f"{_series_key(inst.name + '_sum', inst.label_values)} "
+                f"{inst.sum}")
+            lines.append(
+                f"{_series_key(inst.name + '_count', inst.label_values)} "
+                f"{inst.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+class MetricDict:
+    """A ``defaultdict(float)``-shaped counter bag backed by a registry.
+
+    Drop-in migration target for the hand-rolled ``metrics = defaultdict``
+    dicts (``AgentRuntime``, case studies): reads, ``+=`` and assignment
+    keep exactly their old semantics against an internal float dict (the
+    reported numbers cannot change), while every entry is mirrored into a
+    registry gauge — one series per key, visible in ``snapshot()`` and the
+    Prometheus exposition.  With a disabled registry the mirror is the
+    shared null instrument and only the plain dict remains.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 prefix: str = "", **labels):
+        self._vals: Dict[str, float] = {}
+        self._reg = registry if registry is not None \
+            else MetricsRegistry(enabled=False)
+        self._prefix = prefix
+        self._labels = labels
+        self._gauges: Dict[str, Any] = {}
+
+    def _gauge(self, key: str):
+        g = self._gauges.get(key)
+        if g is None:
+            g = self._gauges[key] = self._reg.gauge(
+                self._prefix + key, **self._labels)
+        return g
+
+    def __getitem__(self, key: str) -> float:
+        return self._vals.setdefault(key, 0.0)
+
+    def __setitem__(self, key: str, value: float) -> None:
+        self._vals[key] = value
+        self._gauge(key).set(value)
+
+    def get(self, key: str, default: float = 0.0) -> float:
+        return self._vals.get(key, default)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._vals
+
+    def __iter__(self):
+        return iter(self._vals)
+
+    def __len__(self) -> int:
+        return len(self._vals)
+
+    def keys(self):
+        return self._vals.keys()
+
+    def items(self):
+        return self._vals.items()
+
+    def values(self):
+        return self._vals.values()

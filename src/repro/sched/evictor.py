@@ -26,6 +26,7 @@ from collections import defaultdict
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
+from repro import obs
 from repro.core import hints as H
 from repro.sim.cluster import Cluster
 from repro.sim.engine import Engine
@@ -68,10 +69,12 @@ class EvictionTicket:
 class EvictionPipeline:
     def __init__(self, gm, cluster: Cluster, engine: Engine,
                  release_cb: Optional[Callable] = None,
-                 default_notice_s: float = DEFAULT_NOTICE_S):
+                 default_notice_s: float = DEFAULT_NOTICE_S,
+                 tracer=None):
         self.gm = gm
         self.cluster = cluster
         self.engine = engine
+        self.tracer = tracer if tracer is not None else obs.default_tracer()
         self.release_cb = release_cb        # e.g. Placer.unplace
         self.default_notice_s = default_notice_s
         self.tickets: Dict[str, EvictionTicket] = {}
@@ -93,26 +96,29 @@ class EvictionPipeline:
         eviction storm submits hundreds of actions at once)."""
         out = []
         notices: List[tuple] = []
-        self._in_submit = True          # guest acks during the wave defer
-        try:
-            for a in actions:
-                if getattr(a, "kind", None) != "evict":
-                    continue
-                t = self._schedule(a, source, notices)
-                if t is not None:
-                    out.append(t)
-        finally:
-            self._in_submit = False
-        if notices:
-            self.gm.bus.publish_batch(H.TOPIC_EVICTIONS, notices)
-        # only now honor acks that arrived during the wave (racing the
-        # managers' advisory notices or this pipeline's own), so release
-        # records never precede their notice records on the bus
-        for vm_id, t_ack in list(self._acked_ahead.items()):
-            ticket = self.tickets.get(vm_id)
-            if ticket is not None and t_ack >= ticket.issued_t - 1e-9:
-                del self._acked_ahead[vm_id]
-                self.early_release(vm_id)
+        with self.tracer.span("evict.submit_wave", cat="evict",
+                              source=source, actions=len(actions)) as sp:
+            self._in_submit = True      # guest acks during the wave defer
+            try:
+                for a in actions:
+                    if getattr(a, "kind", None) != "evict":
+                        continue
+                    t = self._schedule(a, source, notices)
+                    if t is not None:
+                        out.append(t)
+            finally:
+                self._in_submit = False
+            if notices:
+                self.gm.bus.publish_batch(H.TOPIC_EVICTIONS, notices)
+            # only now honor acks that arrived during the wave (racing the
+            # managers' advisory notices or this pipeline's own), so
+            # release records never precede their notice records on the bus
+            for vm_id, t_ack in list(self._acked_ahead.items()):
+                ticket = self.tickets.get(vm_id)
+                if ticket is not None and t_ack >= ticket.issued_t - 1e-9:
+                    del self._acked_ahead[vm_id]
+                    self.early_release(vm_id)
+            sp.set(tickets=len(out))
         return out
 
     def _schedule(self, action, source: str,
@@ -175,6 +181,10 @@ class EvictionPipeline:
     def _kill(self, ticket: EvictionTicket):
         if ticket.cancelled or ticket.killed:
             return
+        with self.tracer.span("evict.kill", cat="evict", vm=ticket.vm_id):
+            self._kill_live(ticket)
+
+    def _kill_live(self, ticket: EvictionTicket):
         vm = self.cluster.vms.get(ticket.vm_id)
         if (vm is not None and vm.alive
                 and f"{vm.server}/{vm.vm_id}" != ticket.resource):
@@ -246,6 +256,11 @@ class EvictionPipeline:
         ticket = self.tickets.get(vm_id)
         if ticket is None or ticket.killed or ticket.cancelled:
             return False
+        with self.tracer.span("evict.early_release", cat="evict", vm=vm_id):
+            return self._early_release(ticket)
+
+    def _early_release(self, ticket: EvictionTicket) -> bool:
+        vm_id = ticket.vm_id
         vm = self.cluster.vms.get(vm_id)
         if vm is None or not vm.alive:
             return False                # the deadline kill will classify it

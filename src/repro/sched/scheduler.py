@@ -30,6 +30,7 @@ from __future__ import annotations
 from collections import defaultdict, deque
 from typing import Deque, Dict, List, Optional
 
+from repro import obs
 from repro.core import hints as H
 from repro.core.global_manager import GlobalManager
 from repro.core.optimizations import ALL_POLICIES, MADatacenterPolicy, \
@@ -56,7 +57,16 @@ class Scheduler:
                  decision_log_cap: int = 10_000,
                  publish_decisions: bool = True,
                  policy_period_s: float = 0.0,
-                 apply_rightsizing: bool = False):
+                 apply_rightsizing: bool = False,
+                 tracer=None, metrics=None):
+        # observability: spans go to the flight recorder, counters to the
+        # registry.  Both default to the process-wide instances, which are
+        # disabled (shared no-op instruments) unless a scenario or
+        # --profile run opted in — the hot path pays per tick-phase, never
+        # per VM.
+        self.tracer = tracer if tracer is not None else obs.default_tracer()
+        self.metrics = metrics if metrics is not None \
+            else obs.default_registry()
         self.engine = engine or Engine()
         self.gm = gm or GlobalManager(clock=self.engine.clock,
                                       hint_rate_per_s=1e6, hint_burst=1e6)
@@ -68,7 +78,8 @@ class Scheduler:
                              default_region, objective)
         self.evictor = EvictionPipeline(self.gm, self.cluster, self.engine,
                                         release_cb=self.placer.unplace,
-                                        default_notice_s=default_notice_s)
+                                        default_notice_s=default_notice_s,
+                                        tracer=self.tracer)
         # the ten Table-2 optimizations, bound to this scheduler's loops
         # (Table-4 priority order — higher-priority optimizations act first
         # on each policy pass)
@@ -109,6 +120,21 @@ class Scheduler:
         # direct-store hint path (set_hints with runtime scope never hits
         # the bus) — without this the placer would keep serving stale hints
         self.gm.hint_listeners.append(self._mark_dirty)
+        # pull-based exposition: stats dicts and queue depths are read at
+        # snapshot() time only, so the hot path never touches them (on the
+        # default disabled registry these calls are no-ops)
+        self.metrics.add_collector("sched", self.telemetry)
+        self.metrics.add_collector("bus", self._bus_depths)
+        self.metrics.add_collector("engine", lambda: {
+            "qsize": self.engine.qsize(),
+            "dispatched": self.engine.dispatched,
+            "t_sim": self.engine.clock.t})
+
+    def _bus_depths(self) -> Dict:
+        bus = self.gm.bus
+        return {"published": bus.published,
+                "topic_depths": {t: sum(bus.end_offsets(t).values())
+                                 for t in bus.topics()}}
 
     def _mark_dirty(self, workload: str):
         self._dirty.add(workload)
@@ -154,6 +180,11 @@ class Scheduler:
         (now) region-independent and sits in a worse region migrates."""
         if not self._dirty:
             return []
+        with self.tracer.span("sched.react_to_hints",
+                              dirty=len(self._dirty)):
+            return self._react_to_hints()
+
+    def _react_to_hints(self) -> List[Decision]:
         dirty, self._dirty = self._dirty, set()
         moved: List[Decision] = []
         budget = self.max_migrations_per_tick
@@ -190,6 +221,23 @@ class Scheduler:
                          ) -> List[Decision]:
         """Drain the pending queue first-fit-decreasing.  Unplaceable VMs
         return to the queue (they retry next tick / after a crunch)."""
+        if not self.cluster.pending:
+            return []
+        with self.tracer.span("sched.placement_drain") as sp:
+            out, n_unplaced = self._drain_pending(max_batch)
+            sp.set(placed=len(out) - n_unplaced, unplaced=n_unplaced)
+        self.metrics.counter(
+            "wi_sched_placed_total",
+            "VMs placed by the pending-queue drain").inc(
+                len(out) - n_unplaced)
+        if n_unplaced:
+            self.metrics.counter(
+                "wi_sched_unplaced_total",
+                "drain attempts returned to the pending queue").inc(
+                    n_unplaced)
+        return out
+
+    def _drain_pending(self, max_batch: Optional[int]):
         if max_batch is None:           # full drain: one pass, no poplefts
             batch = [vm for vm in self.cluster.pending if vm.alive]
             dropped = len(self.cluster.pending) - len(batch)
@@ -215,15 +263,17 @@ class Scheduler:
             self._publish_decision_batch("place", out)
         self.stats["placed"] += len(out) - len(unplaced)
         self.stats["unplaced"] += len(unplaced)
-        return out
+        return out, len(unplaced)
 
     def tick(self):
-        self.react_to_hints()
-        if self.policy_period_s > 0 and \
-                self.engine.clock.t >= self._next_policy_t:
-            self._next_policy_t = self.engine.clock.t + self.policy_period_s
-            self.run_policies(self.engine.clock.t)
-        self.schedule_pending()
+        with self.tracer.span("sched.tick", t_sim=self.engine.clock.t):
+            self.react_to_hints()
+            if self.policy_period_s > 0 and \
+                    self.engine.clock.t >= self._next_policy_t:
+                self._next_policy_t = \
+                    self.engine.clock.t + self.policy_period_s
+                self.run_policies(self.engine.clock.t)
+            self.schedule_pending()
 
     # -- the periodic optimization pass -------------------------------------
     def run_policies(self, now: Optional[float] = None):
@@ -232,8 +282,10 @@ class Scheduler:
         steady-state scheduling hot path pays nothing when disabled."""
         now = self.engine.clock.t if now is None else now
         self._pass_vms = None       # fresh snapshot for this pass
-        for name in self.tick_policies:
-            self.policies[name].on_tick(now)
+        with self.tracer.span("sched.policy_pass", t_sim=now):
+            for name in self.tick_policies:
+                with self.tracer.span(f"sched.policy.{name}", cat="policy"):
+                    self.policies[name].on_tick(now)
         self.stats["policy_passes"] += 1
         self._flush_records()
 
@@ -280,6 +332,11 @@ class Scheduler:
         bandwidth is finite, so a crunch can never stall the platform by
         migrating half a region; the remaining shortfall is covered by
         spot reclaim.  Returns the nominal cores freed."""
+        with self.tracer.span("sched.defrag", region=region,
+                              cores_needed=cores_needed):
+            return self._defragment(region, cores_needed)
+
+    def _defragment(self, region: str, cores_needed: float) -> float:
         freed = 0.0
         moved = 0
         budget = self.max_defrag_migrations
@@ -313,19 +370,26 @@ class Scheduler:
         """Free `cores_needed` nominal cores in `region`: first defragment
         (migrate flexible VMs out), then reclaim spot capacity with honored
         eviction notices."""
-        freed = self.defragment(region, cores_needed)
-        tickets = []
-        if freed < cores_needed:
-            # spot reclaim straight off the cluster's per-server vm index
-            # (O(region VMs)); VMs already mid-eviction are excluded —
-            # their cores are spoken for
-            acts = self.spot.reclaim_cores(self.cluster,
-                                           cores_needed - freed,
-                                           region=region,
-                                           exclude=self.evictor.tickets)
-            tickets = self.evictor.submit(acts, source="spot")
-            freed += sum(self.cluster.vms[t.vm_id].cores for t in tickets)
+        with self.tracer.span("sched.capacity_crunch", region=region,
+                              cores_needed=cores_needed) as sp:
+            freed = self.defragment(region, cores_needed)
+            tickets = []
+            if freed < cores_needed:
+                # spot reclaim straight off the cluster's per-server vm
+                # index (O(region VMs)); VMs already mid-eviction are
+                # excluded — their cores are spoken for
+                acts = self.spot.reclaim_cores(self.cluster,
+                                               cores_needed - freed,
+                                               region=region,
+                                               exclude=self.evictor.tickets)
+                tickets = self.evictor.submit(acts, source="spot")
+                freed += sum(self.cluster.vms[t.vm_id].cores
+                             for t in tickets)
+            sp.set(freed_cores=freed, evictions=len(tickets))
         self.stats["capacity_crunches"] += 1
+        self.metrics.counter(
+            "wi_sched_capacity_crunches_total",
+            "capacity-crunch events handled").inc()
         return {"freed_cores": freed, "evictions": len(tickets),
                 "tickets": tickets}
 
@@ -336,9 +400,12 @@ class Scheduler:
         # walked via the cluster's per-server vm index; VMs already
         # mid-eviction are excluded (their cores would double-count toward
         # the shed target and then be dropped)
-        acts = self.madc.power_event_cluster(self.cluster, server, shed_frac,
-                                             exclude=self.evictor.tickets)
-        tickets = self.evictor.submit(acts, source="ma_datacenters")
+        with self.tracer.span("sched.power_event", cat="policy",
+                              server=server, shed_frac=shed_frac):
+            acts = self.madc.power_event_cluster(
+                self.cluster, server, shed_frac,
+                exclude=self.evictor.tickets)
+            tickets = self.evictor.submit(acts, source="ma_datacenters")
         throttles = [a for a in acts if a.kind == "throttle"]
         self.stats["power_events"] += 1
         self.stats["power_throttles"] += len(throttles)
@@ -368,9 +435,11 @@ class Scheduler:
         dicts) cost more than the placements they report at 100k-VM
         scale.  Decisions are NamedTuples, so rows JSON-serialize as
         plain arrays on durable buses."""
-        self.gm.bus.publish(H.TOPIC_SCHED_DECISIONS, {
-            "kind": kind, "n": len(ds), "t": self.engine.clock.t,
-            "fields": Decision._fields, "decisions": ds})
+        with self.tracer.span("sched.bus_publish", cat="bus",
+                              kind=kind, n=len(ds)):
+            self.gm.bus.publish(H.TOPIC_SCHED_DECISIONS, {
+                "kind": kind, "n": len(ds), "t": self.engine.clock.t,
+                "fields": Decision._fields, "decisions": ds})
 
     def _flush_records(self):
         if not self._record_buf:

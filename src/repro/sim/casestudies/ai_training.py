@@ -50,6 +50,7 @@ from typing import Dict
 
 import jax
 
+from repro import obs
 from repro.agents import (STATEFUL, STATELESS, AgentPolicy, AgentRuntime,
                           TrainerTenant)
 from repro.configs.archs import smoke_config
@@ -106,7 +107,12 @@ def build(seed: int, n_servers: int):
             f"is set before jax initializes")
     devices = devices[:need]
 
-    s = Scheduler(default_notice_s=30.0, policy_period_s=POLICY_PERIOD_S)
+    # live registry + bus-fed lifecycle observer (reported eviction
+    # numbers below are observer-derived, asserted against the pipeline)
+    registry = obs.MetricsRegistry(enabled=True)
+    s = Scheduler(default_notice_s=30.0, policy_period_s=POLICY_PERIOD_S,
+                  metrics=registry)
+    s.lifecycle = obs.LifecycleObserver(s.gm.bus, registry=registry)
     for i in range(n_servers):
         s.cluster.add_server(f"region-0/s{i}", CORES_PER_SERVER,
                              region="region-0")
@@ -223,10 +229,16 @@ def run(seed: int = 0, n_steps: int = N_STEPS,
     rm = runtime.telemetry()
     trainer_reclaims = sum(1 for t in tlog
                            if t.outcome in ("killed", "early_released"))
+    life = s.lifecycle.summary()
+    recon = s.lifecycle.reconcile(ev)
+    # the bus-derived lifecycle books must agree with the pipeline's own
+    assert recon["ok"], recon["diffs"]
+    assert life["early_released"] == len(early_all)
+    assert life["violations"] == len(ev.violations())
     out = {
         "steps": trainer.step,
         "waves": s.stats.get("capacity_crunches", 0),
-        "violations": len(ev.violations()),
+        "violations": int(life["violations"]),
         "trainer_early_releases":
             sum(1 for t in tlog if t.outcome == "early_released"),
         "trainer_ladder_kills":
@@ -260,6 +272,13 @@ def run(seed: int = 0, n_steps: int = N_STEPS,
         "loss_last3": sum(losses[-3:]) / max(len(losses[-3:]), 1),
         "losses_finite": all(l == l and abs(l) != float("inf")
                              for l in losses),
+        # lifecycle-histogram rollups (reconciled against the pipeline)
+        "obs_violations": int(life["violations"]),
+        "obs_reconcile_ok": recon["ok"],
+        "obs_max_notice_s": life["max_notice_s"],
+        "obs_notice_to_ack_p100_s": life["notice_to_ack_s"].get("p100"),
+        "obs_kill_lead_p50_s": life["kill_lead_s"].get("p50"),
+        "obs_acks_observed": life["notice_to_ack_s"].get("count", 0),
     }
     s.gm.close()        # scenario teardown: release WAL/segment handles
     return out

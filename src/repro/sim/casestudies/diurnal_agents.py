@@ -31,6 +31,7 @@ from __future__ import annotations
 import random
 from typing import Dict, Tuple
 
+from repro import obs
 from repro.agents import (PARTIAL, STATEFUL, STATELESS, AgentPolicy,
                           AgentRuntime, DiurnalProfile)
 from repro.sched import Scheduler
@@ -57,7 +58,12 @@ VIDEOCONF_VMS = 10
 def build(seed: int = 0, n_servers_per_region: int = N_SERVERS_PER_REGION,
           vm_scale: float = 1.0) -> Tuple[Scheduler, AgentRuntime]:
     rng = random.Random(seed)
-    s = Scheduler(default_notice_s=30.0)
+    # live registry + bus-fed lifecycle observer: the reported eviction
+    # numbers are derived from the observer and asserted against the
+    # pipeline's books in run()
+    registry = obs.MetricsRegistry(enabled=True)
+    s = Scheduler(default_notice_s=30.0, metrics=registry)
+    s.lifecycle = obs.LifecycleObserver(s.gm.bus, registry=registry)
     for r in ("region-0", "region-green"):
         for i in range(n_servers_per_region):
             s.cluster.add_server(f"{r}/s{i}", CORES_PER_SERVER, region=r)
@@ -163,12 +169,19 @@ def run(seed: int = 0, n_servers_per_region: int = N_SERVERS_PER_REGION,
     resolved = len(killed) + len(early)
     m = rt.telemetry()
     alive = sum(1 for v in s.cluster.vms.values() if v.alive and v.server)
+    life = s.lifecycle.summary()
+    recon = s.lifecycle.reconcile(ev)
+    # bus-derived lifecycle books must agree with the pipeline's own
+    assert recon["ok"], recon["diffs"]
+    assert life["killed"] == len(killed)
+    assert life["early_released"] == len(early)
+    assert life["violations"] == len(ev.violations())
     return {
         "placed": placed0,
-        "evictions_killed": len(killed),
-        "early_releases": len(early),
+        "evictions_killed": int(life["killed"]),
+        "early_releases": int(life["early_released"]),
         "early_release_frac": (len(early) / resolved) if resolved else 0.0,
-        "violations": len(ev.violations()),
+        "violations": int(life["violations"]),
         "min_lead_s": min((t.lead_time_s for t in killed),
                           default=float("inf")),
         "already_gone": ev.stats.get("already_gone", 0),
@@ -187,6 +200,15 @@ def run(seed: int = 0, n_servers_per_region: int = N_SERVERS_PER_REGION,
         "hint_migrations": s.stats.get("hint_migrations", 0),
         "agents_attached": m.get("agents_attached", 0.0),
         "alive_vms": alive,
+        # per-class lifecycle rollups (CI reconciles p100 vs the widest
+        # hinted window: acks always land inside the notice window)
+        "obs_violations": int(life["violations"]),
+        "obs_reconcile_ok": recon["ok"],
+        "obs_max_notice_s": life["max_notice_s"],
+        "obs_notice_to_ack_p100_s": life["notice_to_ack_s"].get("p100"),
+        "obs_ack_to_release_p95_s": life["ack_to_release_s"].get("p95"),
+        "obs_kill_lead_p50_s": life["kill_lead_s"].get("p50"),
+        "obs_acks_observed": life["notice_to_ack_s"].get("count", 0),
     }
 
 

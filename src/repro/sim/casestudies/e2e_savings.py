@@ -34,6 +34,7 @@ from __future__ import annotations
 import random
 from typing import Dict, List
 
+from repro import obs
 from repro.agents import STATEFUL, STATELESS, AgentPolicy, AgentRuntime
 from repro.core.pricing import (ENROLLED_HINT_KEY, BillingMeter,
                                 combined_price)
@@ -118,7 +119,14 @@ def sample_enrollments(n: int, probs: Dict[str, float],
 def build(seed: int = 0, n_workloads: int = N_WORKLOADS,
           n_servers_per_region: int = N_SERVERS_PER_REGION):
     rng = random.Random(seed)
-    s = Scheduler(default_notice_s=30.0, policy_period_s=POLICY_PERIOD_S)
+    # a live registry per scenario run: scheduler phases, agent counters
+    # and the bus-fed lifecycle histograms all land in one place, and the
+    # reported eviction numbers below are *derived* from it (asserted
+    # against the evictor's books)
+    registry = obs.MetricsRegistry(enabled=True)
+    s = Scheduler(default_notice_s=30.0, policy_period_s=POLICY_PERIOD_S,
+                  metrics=registry)
+    observer = obs.LifecycleObserver(s.gm.bus, registry=registry)
     # the e2e billing target is defined over nominal allocations, so the
     # harvest grow/shrink tick stays off (see module docstring)
     s.tick_policies = tuple(p for p in s.tick_policies if p != "harvest")
@@ -173,6 +181,7 @@ def build(seed: int = 0, n_workloads: int = N_WORKLOADS,
         "shrink": shrink,
         "expected_model": expected_fleet_saving(probs),
         "expected_sampled": expected_sampled,
+        "observer": observer,
     }
 
 
@@ -199,6 +208,16 @@ def run(seed: int = 0, n_workloads: int = N_WORKLOADS,
     summary = meter.summary(horizon_s)
     rec = meter.reconcile(horizon_s)
     ev = s.evictor
+    observer: obs.LifecycleObserver = model["observer"]
+    life = observer.summary()
+    recon = observer.reconcile(ev)
+    # the bus-derived lifecycle books must match the pipeline's own —
+    # the reported eviction numbers below come from the observer
+    assert recon["ok"], recon["diffs"]
+    assert life["killed"] == ev.stats.get("kills", 0)
+    assert life["early_released"] == ev.stats.get("early_releases", 0)
+    assert life["cancelled"] == ev.stats.get("cancellations", 0)
+    assert life["violations"] == len(ev.violations())
     from repro.sim.provider_scale import evaluate
     analytic = evaluate()
     out = {
@@ -218,10 +237,11 @@ def run(seed: int = 0, n_workloads: int = N_WORKLOADS,
         "regular_cost": summary["regular_cost"],
         "vms_metered": summary["vms_metered"],
         "placed": placed0,
-        "violations": len(ev.violations()),
-        "evictions_killed": ev.stats.get("kills", 0),
-        "early_releases": ev.stats.get("early_releases", 0),
-        "cancellations": ev.stats.get("cancellations", 0),
+        # derived from the bus-fed observer (asserted == evictor books)
+        "violations": int(life["violations"]),
+        "evictions_killed": int(life["killed"]),
+        "early_releases": int(life["early_released"]),
+        "cancellations": int(life["cancelled"]),
         "replacements_placed":
             runtime.telemetry().get("replacements_placed", 0.0),
         "lost_work_s": runtime.telemetry().get("lost_work_s", 0.0),
@@ -235,6 +255,15 @@ def run(seed: int = 0, n_workloads: int = N_WORKLOADS,
         "cluster_core_hours": rec["cluster_core_hours"],
         "reconcile_abs_diff": rec["abs_diff"],
         "migration_displaced": s.placer.stats.get("migration_displaced", 0),
+        # lifecycle-histogram rollups (CI bench-smoke reconciles these:
+        # every ack must land inside the widest hinted notice window)
+        "obs_violations": int(life["violations"]),
+        "obs_reconcile_ok": recon["ok"],
+        "obs_max_notice_s": life["max_notice_s"],
+        "obs_notice_to_ack_p50_s": life["notice_to_ack_s"].get("p50"),
+        "obs_notice_to_ack_p100_s": life["notice_to_ack_s"].get("p100"),
+        "obs_kill_lead_p50_s": life["kill_lead_s"].get("p50"),
+        "obs_acks_observed": life["notice_to_ack_s"].get("count", 0),
     }
     s.gm.close()        # scenario teardown: release WAL/segment handles
     return out

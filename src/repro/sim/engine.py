@@ -19,6 +19,11 @@ class Engine:
         self.clock = SimClock()
         self._q = []
         self._seq = itertools.count()
+        self.dispatched = 0     # events ever run (observability collector)
+
+    def qsize(self) -> int:
+        """Events still queued (includes events beyond any past horizon)."""
+        return len(self._q)
 
     def at(self, t: float, fn: Callable[[], None]):
         heapq.heappush(self._q, (t, next(self._seq), fn))
@@ -37,6 +42,7 @@ class Engine:
         while self._q and self._q[0][0] <= until:
             t, _, fn = heapq.heappop(self._q)
             self.clock.t = t
+            self.dispatched += 1
             fn()
         # A bounded run always ends exactly at the horizon, even when the
         # event queue drained early (events beyond `until` stay queued).
