@@ -468,6 +468,78 @@ def ai_training():
                 f"loss={r['loss_first3']:.2f}->{r['loss_last3']:.2f}")
 
 
+def chaos_soak():
+    """Chaos soak: the full WI loop under lossy channels, unannounced
+    hardware crashes, and misbehaving guests — every invariant must still
+    hold (the scenario asserts them internally; a failed bar raises).
+    Fault rates honor CHAOS_DROP_P / CHAOS_DUP_P / CHAOS_DELAY_P /
+    CHAOS_REORDER_P / CHAOS_CRASH_RATE; sizes honor CHAOS_SERVERS /
+    CHAOS_VM_SCALE for the CI smoke job.  With every rate at 0 the
+    ChaosBus is pass-through and the run degenerates to a clean fleet."""
+    from repro.sim.casestudies.chaos_soak import (CRASH_RATE_PER_S, DELAY_P,
+                                                  DROP_P, DUP_P, REORDER_P,
+                                                  run)
+    n_servers = int(os.environ.get("CHAOS_SERVERS", 24))
+    vm_scale = float(os.environ.get("CHAOS_VM_SCALE", 1.0))
+    knobs = {
+        "drop_p": float(os.environ.get("CHAOS_DROP_P", DROP_P)),
+        "dup_p": float(os.environ.get("CHAOS_DUP_P", DUP_P)),
+        "delay_p": float(os.environ.get("CHAOS_DELAY_P", DELAY_P)),
+        "reorder_p": float(os.environ.get("CHAOS_REORDER_P", REORDER_P)),
+        "crash_rate_per_s": float(os.environ.get("CHAOS_CRASH_RATE",
+                                                 CRASH_RATE_PER_S)),
+    }
+    us, r = _timed(lambda: run(seed=0, n_servers_per_region=n_servers,
+                               vm_scale=vm_scale, **knobs))
+    # the headline bars, re-asserted here so the benchmark log shows them
+    assert r["violations"] == 0, f"{r['violations']} notice violations"
+    assert r["stateless_killed_without_ack"] == 0
+    assert r["obs_reconcile_ok"]
+    assert r["billing_abs_diff"] < 1e-4, r["billing_abs_diff"]
+    assert 0 < r["trainer_lost_steps"] <= r["trainer_ckpt_every"]
+    JSON_METRICS["chaos_soak"] = {
+        "servers_per_region": n_servers,
+        "fault_rates": knobs,
+        "violations": r["violations"],
+        "notices": r["notices"],
+        "killed": r["killed"],
+        "early_released": r["early_released"],
+        "crashed_vms": r["crashed_vms"],
+        "crashed_tickets": r["crashed_tickets"],
+        "crash_detect_max_s": round(r["crash_detect_max_s"], 2),
+        "mttr_count": r["mttr_count"],
+        "mttr_p95_s": round(r["mttr_p95_s"], 2),
+        "reminders": r["reminders"],
+        "acks_deduped": r["acks_deduped"],
+        "silent_guests": r["silent_guests"],
+        "bus_dropped": r["bus_dropped"],
+        "bus_duplicated": r["bus_duplicated"],
+        "bus_delayed": r["bus_delayed"],
+        "bus_reordered": r["bus_reordered"],
+        "spam_hints_sent": r["spam_hints_sent"],
+        "spam_hints_accepted": r["spam_hints_accepted"],
+        "rogue_notices_ignored": r["rogue_notices_ignored"],
+        "rogue_self_crashes": r["rogue_self_crashes"],
+        "alive_web": r["alive_web"],
+        "alive_train": r["alive_train"],
+        "trainer_steps": r["trainer_steps"],
+        "trainer_lost_steps": r["trainer_lost_steps"],
+        "trainer_ckpt_every": r["trainer_ckpt_every"],
+        "trainer_corrupt_skipped": r["trainer_corrupt_skipped"],
+        "stateless_killed_without_ack": r["stateless_killed_without_ack"],
+        "billing_abs_diff": r["billing_abs_diff"],
+        "obs_reconcile_ok": r["obs_reconcile_ok"],
+    }
+    return us, (f"crashes={r['crashed_vms']},"
+                f"mttr_p95={r['mttr_p95_s']:.1f}s,"
+                f"detect_max={r['crash_detect_max_s']:.1f}s,"
+                f"dropped={r['bus_dropped']},"
+                f"reminders={r['reminders']},"
+                f"lost_steps={r['trainer_lost_steps']}"
+                f"<= {r['trainer_ckpt_every']},"
+                f"violations={r['violations']}")
+
+
 def sched_scenarios():
     """Eviction-storm + capacity-crunch scenarios (sched/ subsystem)."""
     from repro.sim.casestudies.capacity_crunch import run as run_crunch
@@ -486,7 +558,10 @@ _SIZE_KNOBS = ("SCHED_SCALE_SERVERS", "SCHED_SCALE_VMS",
                "SCHED_SCALE_XL_SERVERS", "SCHED_SCALE_XL_VMS",
                "AGENTS_DIURNAL_SERVERS", "AGENTS_DIURNAL_VM_SCALE",
                "E2E_SAVINGS_WORKLOADS", "E2E_SAVINGS_SERVERS",
-               "AI_TRAINING_STEPS", "AI_TRAINING_SERVERS")
+               "AI_TRAINING_STEPS", "AI_TRAINING_SERVERS",
+               "CHAOS_SERVERS", "CHAOS_VM_SCALE",
+               "CHAOS_DROP_P", "CHAOS_DUP_P", "CHAOS_DELAY_P",
+               "CHAOS_REORDER_P", "CHAOS_CRASH_RATE")
 
 
 def _run_meta() -> dict:
@@ -518,7 +593,8 @@ def _run_meta() -> dict:
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
        s62_microservices, s63_videoconf, f5_savings, e2e_savings,
        sched_scale, sched_scale_xl, sched_scenarios, agents_diurnal,
-       ai_training, wi_hint_throughput, kernel_flash, roofline_table]
+       ai_training, chaos_soak, wi_hint_throughput, kernel_flash,
+       roofline_table]
 
 # sched_scale_xl is opt-in on full runs (it needs ~100k simulated VMs);
 # request it explicitly via --only

@@ -48,6 +48,9 @@ class WorkloadAgent:
         self.ckpt_running = False
         self.acked_eviction = False     # consented to at least one release
         self.dead = False
+        # a rogue (never-ack) agent sets this: the lease loop stops
+        # heartbeating for it, so the local manager declares it silent
+        self.unresponsive = False
         # generation guard: cancel/rebind invalidate in-flight checkpoint
         # timers, so a stale timer can never ack a *later* ticket
         self._ckpt_gen = 0
@@ -79,9 +82,23 @@ class WorkloadAgent:
         elif kind in _SHED_EVENTS:
             self._on_shed(event)
 
+    def heartbeat(self):
+        """Refresh the host-side lease (driven by the runtime's lease loop;
+        acks and hint writes also count as signs of life)."""
+        if not self.dead and not self.unresponsive:
+            self.ep.heartbeat()
+
     def _on_eviction(self, event: Dict[str, Any]):
         if self.draining:
-            return                      # reminder / duplicate: already on it
+            # reminder / duplicate: already on it — but if we acked and the
+            # ack record was lost in transit, the platform is redelivering
+            # because it never saw it.  Re-ack (each redelivery carries a
+            # fresh seq, so this is not endpoint-deduped; the pipeline's
+            # ticket has long been released in the loss-free case, making
+            # this a no-op there).
+            if self.acked_eviction and not self.ckpt_running:
+                self._ack(event)
+            return
         self.draining = True
         self.rt.metrics["eviction_notices_seen"] += 1
         pol = self.policy

@@ -44,6 +44,11 @@ class AgentRuntime:
         self._repl_pending: Dict[str, float] = {}
         self._repl_seq = 0
         self.phase = "peak"
+        # crash-replacement backoff: workload -> (next_delay_s, last_crash_t)
+        # — a workload whose replicas keep crashing backs off exponentially
+        # instead of hammering the pending queue
+        self._crash_backoff: Dict[str, tuple] = {}
+        self._lease_s = 0.0
         # defaultdict(float) semantics preserved (MetricDict's internal
         # float dict is the source of truth) with every key mirrored into
         # a registry gauge; defaults to the scheduler's registry, so agent
@@ -67,8 +72,30 @@ class AgentRuntime:
             lm = self._locals[server_id] = LocalManager(
                 server_id, self.gm.bus, clock=self.engine.clock,
                 vm_hint_rate_per_s=self._hint_rate[0],
-                vm_hint_burst=self._hint_rate[1])
+                vm_hint_burst=self._hint_rate[1],
+                lease_s=self._lease_s)
         return lm
+
+    def enable_leases(self, lease_s: float, until: float,
+                      check_period_s: float = 5.0):
+        """Turn on the heartbeat/lease loop: every ``check_period_s`` each
+        live responsive agent heartbeats its endpoint and every local
+        manager sweeps its leases, publishing ``lease_expired`` for silent
+        guests (the scheduler then stops redelivering notices to them and
+        lets the ladder kill stand).  Existing local managers adopt the
+        lease too."""
+        self._lease_s = lease_s
+        for lm in self._locals.values():
+            lm.lease_s = lease_s
+
+        def beat():
+            for agent in list(self.agents.values()):
+                agent.heartbeat()
+            for lm in self._locals.values():
+                expired = lm.check_leases()
+                if expired:
+                    self.metrics["leases_expired"] += len(expired)
+        self.engine.every(check_period_s, beat, until)
 
     def policy_for(self, workload: str) -> AgentPolicy:
         return self.policies.get(workload, self.default_policy)
@@ -163,8 +190,19 @@ class AgentRuntime:
         agent = self.detach(vm.vm_id)
         if agent is None:
             return
+        crashed = vm.vm_id in self.cluster.crashed_vms
         lost = agent.on_killed(self.now())
         self.metrics["lost_work_s"] += lost
+        if crashed:
+            # an unannounced hardware crash, not an eviction: no notice
+            # preceded it, so the without-ack bar does not apply.  The
+            # workload observes replica death and (scale-out classes)
+            # requests a replacement with per-workload backoff.
+            self.metrics["agent_vms_crashed"] += 1
+            self.metrics["lost_work_s_crash"] += lost
+            if agent.policy.scale_out_in and not agent.draining:
+                self._replace_after_crash(agent)
+            return
         if agent.policy.statefulness == STATELESS:
             self.metrics["lost_work_s_stateless"] += lost
             if agent.draining and not agent.acked_eviction:
@@ -173,6 +211,27 @@ class AgentRuntime:
                 # consented (acked) before the platform took it
                 self.metrics["stateless_killed_without_ack"] += 1
         self.metrics["agent_vms_killed"] += 1
+
+    # -- crash recovery ------------------------------------------------------
+    _CRASH_BACKOFF_BASE_S = 2.0
+    _CRASH_BACKOFF_CAP_S = 32.0
+    _CRASH_BACKOFF_RESET_S = 300.0
+
+    def _replace_after_crash(self, agent: WorkloadAgent):
+        """Request a replacement for a crashed replica, with per-workload
+        exponential backoff (reset after a quiet period): a workload whose
+        replicas crash repeatedly must not flood the pending queue."""
+        w = agent.vm.workload
+        now = self.now()
+        delay, last = self._crash_backoff.get(
+            w, (self._CRASH_BACKOFF_BASE_S, -1e18))
+        if now - last > self._CRASH_BACKOFF_RESET_S:
+            delay = self._CRASH_BACKOFF_BASE_S
+        self._crash_backoff[w] = (
+            min(delay * 2.0, self._CRASH_BACKOFF_CAP_S), now)
+        self.metrics["crash_replacements_requested"] += 1
+        self.engine.after(delay, lambda a=agent:
+                          self.request_replacement(a, {"deadline_s": 0.0}))
 
     # -- workload-side actions ----------------------------------------------
     def shed_load(self, agent: WorkloadAgent, new_util_p95: float):

@@ -1,7 +1,7 @@
 """The elastic JAX trainer as a real scheduler tenant (paper §4).
 
 ``runtime.trainer.WITrainer`` has always *reacted* to platform events, but
-until now only to synthetic ones from ``runtime.faults.FaultInjector``.
+until now only to synthetic ones from ``repro.chaos.FaultInjector``.
 This module attaches the trainer to VMs placed by the real platform
 scheduler (``repro.sched``), closing the loop the paper's AI-training
 pitch needs end-to-end:

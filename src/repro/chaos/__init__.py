@@ -1,0 +1,35 @@
+"""repro.chaos — deterministic fault injection for the WI reproduction.
+
+Everything chaotic flows from one seeded ``FaultPlan``:
+
+  * ``ChaosBus`` wraps the WI bus and drops / delays / duplicates /
+    reorders records on guest-facing topics (platform books stay
+    transactional — see ``PROTECTED_TOPICS``);
+  * ``CrashInjector`` arms unannounced hardware crashes on the engine;
+  * ``misbehaving_factory`` / ``install_guest_modes`` swap rogue agents
+    into workload policies (never-ack, slow-ack, crash-mid-checkpoint,
+    hint-spam);
+  * ``FaultInjector`` is the single-process unit-test shim (publishes
+    platform events straight through a GlobalManager, no scheduler).
+
+The chaos soak (``sim/casestudies/chaos_soak.py``) composes all of these;
+docs/RESILIENCE.md documents the failure model and the hardening it
+exercises.
+"""
+from repro.chaos.bus import ChaosBus
+from repro.chaos.crashes import CrashInjector
+from repro.chaos.guests import (MisbehavingAgent, install_guest_modes,
+                                misbehaving_factory)
+from repro.chaos.injector import FaultInjector
+from repro.chaos.plan import (GUEST_CRASH_MID_CKPT, GUEST_HINT_SPAM,
+                              GUEST_MODES, GUEST_NEVER_ACK, GUEST_SLOW_ACK,
+                              PROTECTED_TOPICS, ChannelFaults, FaultPlan,
+                              lossy_guest_plan)
+
+__all__ = [
+    "ChaosBus", "ChannelFaults", "CrashInjector", "FaultInjector",
+    "FaultPlan", "GUEST_CRASH_MID_CKPT", "GUEST_HINT_SPAM", "GUEST_MODES",
+    "GUEST_NEVER_ACK", "GUEST_SLOW_ACK", "MisbehavingAgent",
+    "PROTECTED_TOPICS", "install_guest_modes", "lossy_guest_plan",
+    "misbehaving_factory",
+]

@@ -1,0 +1,128 @@
+"""ChaosBus: a fault-injecting wrapper around ``core.bus.Bus``.
+
+Same producer/consumer API as the real bus; publishes on topics named in
+the ``FaultPlan`` may be dropped, delayed, duplicated, or reordered before
+they reach the inner bus.  Faults are applied on the *publish* side — a
+dropped record is lost for every consumer, matching a producer-side send
+failure — which keeps the model simple and the books checkable (see
+docs/RESILIENCE.md).  Topics without faults in the plan take a strict
+pass-through path: with an all-zero plan the wrapper is behaviorally
+identical to the inner bus, so existing benchmarks reproduce their bars
+unchanged.
+
+Fault semantics per publish on a faulted topic:
+  * **drop** — the record never reaches the inner bus; the caller gets a
+    synthetic ``(0, -1)`` ack (producers in this codebase ignore acks).
+  * **delay** — delivery deferred by U(0, delay_max_s] sim-seconds via the
+    engine; requires an engine.
+  * **reorder** — the record is held back until the *next* publish on the
+    topic lands first (or a safety timer flushes it), i.e. two adjacent
+    records swap; at most one record is held per topic at a time.
+  * **duplicate** — decided independently of the primary fate: the record
+    is appended twice back-to-back (or twice after its delay).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.chaos.plan import ChannelFaults, FaultPlan
+
+
+class ChaosBus:
+    def __init__(self, inner, plan: Optional[FaultPlan] = None, engine=None):
+        self.inner = inner
+        self.plan = plan or FaultPlan()
+        self.engine = engine
+        # topic -> the one held-back (key, value, dup) awaiting a successor
+        self._held: Dict[str, tuple] = {}
+        self.stats: Dict[str, int] = {
+            "dropped": 0, "delayed": 0, "duplicated": 0, "reordered": 0}
+        needs_engine = any(
+            ch.delay_p > 0.0 or ch.reorder_p > 0.0
+            for ch in self.plan.channels.values())
+        if needs_engine and engine is None:
+            raise ValueError("FaultPlan uses delay/reorder: ChaosBus needs "
+                             "an engine to defer deliveries")
+
+    # -- faulted producer path ----------------------------------------------
+    def _deliver(self, topic: str, value, key, dup: bool) -> Tuple[int, int]:
+        ack = self.inner.publish(topic, value, key=key)
+        if dup:
+            self.inner.publish(topic, value, key=key)
+            self.stats["duplicated"] += 1
+        return ack
+
+    def _flush_held(self, topic: str, entry):
+        """Deliver a held-back record (successor landed, or safety timer)."""
+        if self._held.get(topic) is entry:
+            del self._held[topic]
+            key, value, dup = entry
+            self._deliver(topic, value, key, dup)
+
+    def publish(self, topic: str, value, key=None) -> Tuple[int, int]:
+        ch = self.plan.channel(topic)
+        if ch is None:
+            return self.inner.publish(topic, value, key=key)
+        rng = self.plan.rng(topic)
+        fate = rng.random()
+        dup = rng.random() < ch.dup_p
+        held = self._held.get(topic)
+        if (held is None and
+                ch.drop_p + ch.delay_p <= fate
+                < ch.drop_p + ch.delay_p + ch.reorder_p):
+            entry = (key, value, dup)
+            self._held[topic] = entry
+            self.stats["reordered"] += 1
+            self.engine.after(ch.reorder_hold_s,
+                              lambda: self._flush_held(topic, entry))
+            return 0, -1
+        ack: Tuple[int, int] = (0, -1)
+        if fate < ch.drop_p:
+            self.stats["dropped"] += 1
+        elif fate < ch.drop_p + ch.delay_p:
+            d = rng.uniform(0.0, ch.delay_max_s)
+            self.stats["delayed"] += 1
+            self.engine.after(d, lambda: self._deliver(topic, value, key, dup))
+        else:
+            ack = self._deliver(topic, value, key, dup)
+        if held is not None:    # the successor has gone by: swap complete
+            self._flush_held(topic, held)
+        return ack
+
+    def publish_batch(self, topic: str, items) -> List[Tuple[int, int]]:
+        if self.plan.channel(topic) is None:
+            return self.inner.publish_batch(topic, items)
+        return [self.publish(topic, v, key=k) for k, v in items]
+
+    # -- everything else delegates -------------------------------------------
+    def subscribe(self, topic, callback):
+        return self.inner.subscribe(topic, callback)
+
+    def poll(self, topic, group, max_records: int = 100):
+        return self.inner.poll(topic, group, max_records)
+
+    def commit(self, topic, group, partition, offset):
+        return self.inner.commit(topic, group, partition, offset)
+
+    def seek_to_beginning(self, topic, group):
+        return self.inner.seek_to_beginning(topic, group)
+
+    def topics(self):
+        return self.inner.topics()
+
+    def end_offsets(self, topic):
+        return self.inner.end_offsets(topic)
+
+    def lag(self, topic, group):
+        return self.inner.lag(topic, group)
+
+    def close(self):
+        return self.inner.close()
+
+    @property
+    def published(self) -> int:
+        return self.inner.published
+
+    @property
+    def _clock(self):
+        return self.inner._clock

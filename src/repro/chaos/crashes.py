@@ -1,0 +1,66 @@
+"""CrashInjector: arms a plan's hardware-crash schedule on the engine.
+
+Crashes are *unannounced*: they call ``Cluster.crash_vm`` /
+``Cluster.crash_server`` directly — no eviction notice, no power event, no
+bus record — so the platform only learns about them when the scheduler's
+repair loop drains the cluster's crash queue on its next tick.  The
+injector can also sample extra crashes at a rate, deterministically from
+the plan seed.
+"""
+from __future__ import annotations
+
+import random
+from typing import List, Tuple
+
+from repro.chaos.plan import FaultPlan
+
+
+class CrashInjector:
+    def __init__(self, cluster, engine, plan: FaultPlan):
+        self.cluster, self.engine, self.plan = cluster, engine, plan
+        self.stats = {"vm_crashes": 0, "server_crashes": 0, "misses": 0}
+        self._rng = random.Random(f"{plan.seed}:crashes")
+
+    def arm(self):
+        """Schedule every crash in the plan on the engine."""
+        for t, vm_id in self.plan.vm_crashes:
+            self.engine.at(t, lambda v=vm_id: self.crash_vm(v))
+        for t, sid in self.plan.server_crashes:
+            self.engine.at(t, lambda s=sid: self.crash_server(s))
+        return self
+
+    def arm_random_vm_crashes(self, rate_per_s: float, until: float,
+                              period_s: float = 10.0):
+        """Poisson-ish background VM crashes: every ``period_s`` each tick
+        crashes one uniformly chosen live VM with probability
+        ``rate_per_s * period_s`` (clamped).  Victim choice is seeded and
+        sorted, so runs are reproducible.  The crash instant is jittered
+        *within* the period so it never lands exactly on a scheduler tick
+        boundary — otherwise detection latency would measure as a free
+        zero instead of the honest crash->next-tick gap."""
+        p = min(1.0, rate_per_s * period_s)
+
+        def crash_one():
+            live = sorted(v.vm_id for v in self.cluster.vms.values()
+                          if v.alive and v.server)
+            if live:
+                self.crash_vm(self._rng.choice(live))
+
+        def tick():
+            if self._rng.random() >= p:
+                return
+            self.engine.after(self._rng.uniform(0.1, 0.9) * period_s,
+                              crash_one)
+        self.engine.every(period_s, tick, until)
+        return self
+
+    def crash_vm(self, vm_id: str) -> bool:
+        ok = self.cluster.crash_vm(vm_id)
+        self.stats["vm_crashes" if ok else "misses"] += 1
+        return ok
+
+    def crash_server(self, server_id: str) -> List[str]:
+        victims = self.cluster.crash_server(server_id)
+        self.stats["server_crashes"] += 1
+        self.stats["vm_crashes"] += len(victims)
+        return victims

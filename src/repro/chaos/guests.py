@@ -1,0 +1,100 @@
+"""Misbehaving guests: agent fault modes driven from a ``FaultPlan``.
+
+The platform must keep its invariants no matter what runs inside the VM
+(§4.3: hints are untrusted input).  ``MisbehavingAgent`` subclasses the
+normal ``WorkloadAgent`` with one of four rogue behaviors:
+
+  * ``never_ack`` — goes completely silent: no heartbeats, no acks.  The
+    local manager's lease expires, the scheduler marks the guest silent
+    (stopping notice redelivery), and the eviction ladder kills at the
+    deadline — a notice violation must NOT result.
+  * ``slow_ack`` — checkpoints far slower than any notice window, so the
+    deadline always wins and the un-checkpointed work is metered lost.
+  * ``crash_mid_ckpt`` — the VM hardware-crashes halfway through its
+    emergency checkpoint (an unannounced failure racing the ladder).
+  * ``hint_spam`` — floods the guest hint channel; the local manager's
+    per-VM rate limiter must absorb it without starving other guests.
+
+``install_guest_modes`` wires the plan's ``guest_modes`` map into a
+policies dict before the ``AgentRuntime`` is built.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.agents.agent import WorkloadAgent
+from repro.chaos import plan as P
+
+SPAM_BURSTS = 20
+SPAM_PERIOD_S = 15.0
+SPAM_PER_BURST = 25
+SLOW_FACTOR = 3.0
+
+
+class MisbehavingAgent(WorkloadAgent):
+    def __init__(self, vm, endpoint, runtime, policy, mode: str):
+        super().__init__(vm, endpoint, runtime, policy)
+        self.mode = mode
+        self._crashed_self = False
+        if mode == P.GUEST_NEVER_ACK:
+            self.unresponsive = True        # lease loop stops heartbeating
+        elif mode == P.GUEST_HINT_SPAM:
+            self._spam_left = SPAM_BURSTS
+            runtime.engine.after(SPAM_PERIOD_S, self._spam)
+
+    # -- never_ack ----------------------------------------------------------
+    def _on_eviction(self, event: Dict[str, Any]):
+        if self.mode == P.GUEST_NEVER_ACK:
+            if not self.draining:
+                self.draining = True        # saw it; will never answer
+                self.rt.metrics["eviction_notices_seen"] += 1
+                self.rt.metrics["rogue_notices_ignored"] += 1
+            return
+        super()._on_eviction(event)
+
+    # -- slow_ack / crash_mid_ckpt ------------------------------------------
+    def _begin_checkpoint(self, event: Dict[str, Any]) -> float:
+        lat = super()._begin_checkpoint(event)
+        if self.mode == P.GUEST_SLOW_ACK:
+            notice = float(event.get("payload", {}).get(
+                "notice_s", event.get("deadline_s", 30.0)))
+            return max(lat, notice * SLOW_FACTOR)   # the deadline always wins
+        if self.mode == P.GUEST_CRASH_MID_CKPT and lat > 0.0 \
+                and not self._crashed_self:
+            self._crashed_self = True
+            self.rt.engine.after(lat * 0.5, self._crash_self)
+        return lat
+
+    def _crash_self(self):
+        if not self.dead and self.rt.cluster.crash_vm(self.vm.vm_id):
+            self.rt.metrics["rogue_self_crashes"] += 1
+
+    # -- hint_spam ----------------------------------------------------------
+    def _spam(self):
+        if self.dead or self._spam_left <= 0:
+            return
+        self._spam_left -= 1
+        accepted = 0
+        for i in range(SPAM_PER_BURST):
+            if self.ep.set_runtime_hints({"x-spam": float(i)}):
+                accepted += 1
+        self.rt.metrics["spam_hints_sent"] += SPAM_PER_BURST
+        self.rt.metrics["spam_hints_accepted"] += accepted
+        self.rt.engine.after(SPAM_PERIOD_S, self._spam)
+
+
+def misbehaving_factory(mode: str):
+    """An ``AgentPolicy.agent_factory`` that builds rogue agents."""
+    def factory(vm, endpoint, runtime, policy):
+        return MisbehavingAgent(vm, endpoint, runtime, policy, mode=mode)
+    return factory
+
+
+def install_guest_modes(plan: P.FaultPlan, policies: Dict[str, Any]):
+    """Point each plan-named workload's policy at a rogue agent factory
+    (call before constructing the AgentRuntime)."""
+    for workload, mode in plan.guest_modes.items():
+        pol = policies.get(workload)
+        if pol is not None:
+            pol.agent_factory = misbehaving_factory(mode)
+    return policies

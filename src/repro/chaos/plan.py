@@ -1,0 +1,115 @@
+"""Seeded fault plans: the single source of truth for injected chaos.
+
+A ``FaultPlan`` describes everything a chaos run does to the system —
+per-topic channel faults (drop / duplicate / delay / reorder), scheduled
+hardware crashes, and per-workload guest misbehavior — from one seed, so
+every run is exactly reproducible.  The plan is *data*; the machinery that
+acts on it lives next door (``ChaosBus`` for channels, ``CrashInjector``
+for hardware, ``misbehaving_factory`` for guests).
+
+Delivery contract (docs/RESILIENCE.md): the scheduler-authoritative topics
+``wi.sched.decisions`` / ``wi.sched.evictions`` / ``wi.sched.failures``
+are transactional — they are the platform's own books and may never be
+faulted; a plan that names one raises at construction.  Guest-facing
+channels (platform hints, acks, runtime hints, leases, deploy hints) are
+best-effort, matching the paper's framing of hints as advisory — the
+hardened endpoints must survive loss, duplication, and reordering there.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import hints as H
+
+# Topics the platform relies on transactionally: its own decision /
+# eviction / failure streams.  Faulting these would corrupt the books the
+# chaos soak exists to validate, so plans refuse them outright.
+PROTECTED_TOPICS = frozenset({
+    H.TOPIC_SCHED_DECISIONS,
+    H.TOPIC_EVICTIONS,
+    H.TOPIC_FAILURES,
+})
+
+# Guest misbehavior modes (see chaos/guests.py)
+GUEST_NEVER_ACK = "never_ack"
+GUEST_SLOW_ACK = "slow_ack"
+GUEST_CRASH_MID_CKPT = "crash_mid_ckpt"
+GUEST_HINT_SPAM = "hint_spam"
+GUEST_MODES = frozenset({GUEST_NEVER_ACK, GUEST_SLOW_ACK,
+                         GUEST_CRASH_MID_CKPT, GUEST_HINT_SPAM})
+
+
+@dataclass(frozen=True)
+class ChannelFaults:
+    """Per-topic fault rates.  Fates are mutually exclusive per record
+    (drop XOR delay XOR reorder XOR clean delivery); duplication is decided
+    independently of the primary fate, so a delayed record may also arrive
+    twice."""
+    drop_p: float = 0.0         # record silently lost (all consumers)
+    dup_p: float = 0.0          # record delivered again immediately
+    delay_p: float = 0.0        # record held for U(0, delay_max_s]
+    delay_max_s: float = 5.0
+    reorder_p: float = 0.0      # record held back past its successor
+    reorder_hold_s: float = 2.0  # safety flush if no successor arrives
+
+    def any(self) -> bool:
+        return (self.drop_p > 0.0 or self.dup_p > 0.0 or
+                self.delay_p > 0.0 or self.reorder_p > 0.0)
+
+
+@dataclass
+class FaultPlan:
+    """One deterministic chaos schedule.
+
+    ``channels`` maps topic -> ``ChannelFaults``; ``server_crashes`` /
+    ``vm_crashes`` are ``(t, id)`` schedules armed on the engine by
+    ``CrashInjector``; ``guest_modes`` maps workload -> one of
+    ``GUEST_MODES``.  Randomness is derived per-topic from the seed alone
+    (``random.Random(f"{seed}:{topic}")``), independent of
+    ``PYTHONHASHSEED`` and of how many other topics are faulted.
+    """
+    seed: int = 0
+    channels: Dict[str, ChannelFaults] = field(default_factory=dict)
+    server_crashes: List[Tuple[float, str]] = field(default_factory=list)
+    vm_crashes: List[Tuple[float, str]] = field(default_factory=list)
+    guest_modes: Dict[str, str] = field(default_factory=dict)
+
+    def __post_init__(self):
+        for topic, ch in self.channels.items():
+            if topic in PROTECTED_TOPICS and ch.any():
+                raise ValueError(
+                    f"topic {topic!r} is transactional (platform books); "
+                    f"a FaultPlan may not fault it")
+        for w, mode in self.guest_modes.items():
+            if mode not in GUEST_MODES:
+                raise ValueError(f"unknown guest mode {mode!r} for {w!r}")
+        self._rngs: Dict[str, random.Random] = {}
+
+    def channel(self, topic: str) -> Optional[ChannelFaults]:
+        """The faults for a topic, or None when the topic is clean (the
+        pass-through fast path in ``ChaosBus``)."""
+        ch = self.channels.get(topic)
+        return ch if ch is not None and ch.any() else None
+
+    def rng(self, topic: str) -> random.Random:
+        r = self._rngs.get(topic)
+        if r is None:
+            r = self._rngs[topic] = random.Random(f"{self.seed}:{topic}")
+        return r
+
+
+def lossy_guest_plan(seed: int = 0, drop_p: float = 0.05,
+                     dup_p: float = 0.05, delay_p: float = 0.05,
+                     delay_max_s: float = 3.0, reorder_p: float = 0.05,
+                     **kw) -> FaultPlan:
+    """Convenience: fault every guest-facing channel uniformly (platform
+    hints, acks, runtime hints) — the standard chaos-soak configuration."""
+    ch = ChannelFaults(drop_p=drop_p, dup_p=dup_p, delay_p=delay_p,
+                       delay_max_s=delay_max_s, reorder_p=reorder_p)
+    return FaultPlan(seed=seed, channels={
+        H.TOPIC_PLATFORM_HINTS: ch,
+        H.TOPIC_EVENT_ACKS: ch,
+        H.TOPIC_RUNTIME_HINTS: ChannelFaults(drop_p=drop_p),
+    }, **kw)

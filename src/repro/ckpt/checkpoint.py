@@ -13,6 +13,12 @@ Guarantees:
   * elastic restore — ``restore`` takes target shardings and device_puts
     leaves onto a *different* mesh than the one that saved them (the
     WI elastic-resize path),
+  * integrity — each leaf's crc32 is recorded in the manifest at write
+    time; ``restore(verify=True)`` (the default) raises
+    ``CheckpointCorruptError`` on mismatch, and ``latest_good_step()``
+    walks committed checkpoints newest-first to find one that verifies
+    (the unannounced-crash recovery path: a torn or bit-flipped emergency
+    checkpoint must not brick the job),
   * retention — keep the newest K committed checkpoints.
 """
 from __future__ import annotations
@@ -23,11 +29,21 @@ import re
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed checkpoint failed integrity verification (torn write,
+    bit flip, or truncated leaf file)."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _leaf_name(path) -> str:
@@ -108,6 +124,7 @@ class Checkpointer:
             "names": [names[i] for i in range(len(leaves))],
             "dtypes": [str(a.dtype) for a in leaves],
             "shapes": [list(a.shape) for a in leaves],
+            "crc32": [_crc(a) for a in leaves],
             "ts": time.time(),
         }
         (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -144,11 +161,50 @@ class Checkpointer:
         s = self.committed_steps()
         return s[-1] if s else None
 
-    def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
+    # -- integrity ------------------------------------------------------------
+    def verify(self, step: int) -> bool:
+        """True iff the committed checkpoint's leaves all match their
+        manifest crc32s.  Legacy manifests without a ``crc32`` list verify
+        trivially (nothing to check against); unreadable manifests or leaf
+        files verify False."""
+        d = self.root / f"step_{step}"
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, json.JSONDecodeError):
+            return False
+        crcs = manifest.get("crc32")
+        if crcs is None:
+            return True
+        names = manifest.get("names", [])
+        if len(crcs) != len(names):
+            return False
+        for name, want in zip(names, crcs):
+            try:
+                arr = np.load(d / f"{name}.npy")
+            except Exception:
+                return False        # truncated / unparseable leaf
+            if _crc(arr) != int(want):
+                return False
+        return True
+
+    def latest_good_step(self) -> Optional[int]:
+        """Newest committed checkpoint that passes integrity verification
+        (the crash-recovery entry point: skips torn/corrupt checkpoints)."""
+        for s in reversed(self.committed_steps()):
+            if self.verify(s):
+                return s
+        return None
+
+    def restore(self, step: int, like: Any, shardings: Any = None,
+                verify: bool = True) -> Any:
         """Restore into the structure of ``like``; optionally device_put each
-        leaf to ``shardings`` (elastic resharding onto a new mesh)."""
+        leaf to ``shardings`` (elastic resharding onto a new mesh).  With
+        ``verify`` (the default) each leaf is checked against its manifest
+        crc32 and a mismatch raises ``CheckpointCorruptError`` — callers
+        fall back to ``latest_good_step()``."""
         d = self.root / f"step_{step}"
         manifest = json.loads((d / "manifest.json").read_text())
+        crcs: Optional[List] = manifest.get("crc32") if verify else None
         leaves, treedef = jax.tree_util.tree_flatten(like)
         assert len(leaves) == manifest["n_leaves"], "tree structure changed"
         skeleton = jax.tree_util.tree_unflatten(treedef,
@@ -160,7 +216,16 @@ class Checkpointer:
                         if shardings is not None else [None] * len(leaves))
         out = []
         for i in range(len(leaves)):
-            arr = np.load(d / f"{names[i]}.npy")
+            try:
+                arr = np.load(d / f"{names[i]}.npy")
+            except Exception as e:
+                if verify:
+                    raise CheckpointCorruptError(
+                        f"step {step}: leaf {names[i]} unreadable") from e
+                raise
+            if crcs is not None and _crc(arr) != int(crcs[i]):
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {names[i]} crc mismatch")
             want = leaves[i]
             if hasattr(want, "dtype"):
                 arr = arr.astype(want.dtype)

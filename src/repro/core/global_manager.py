@@ -133,11 +133,15 @@ class GlobalManager:
     def purge_resource_hints(self, workload: str, resource: str):
         """Drop per-resource hint state once the resource is gone (its VM
         was killed) — under 100k-VM churn these entries otherwise grow
-        without bound.  Workload-level ('*') hints are untouched."""
+        without bound.  Workload-level ('*') hints are untouched.  The
+        consistency checker's per-resource history goes with it: every
+        evictor terminal outcome lands here, so safety state stays bounded
+        under churn too."""
         if resource == "*":
             return
         for scope in ("deployment", "runtime"):
             self.store.delete(f"hints/{scope}/{workload}/{resource}")
+        self.checker.forget(workload, resource)
 
     # -- aggregation (§4.1) ----------------------------------------------------
     def aggregate(self, level: str = "server") -> Dict[str, Dict[str, Any]]:

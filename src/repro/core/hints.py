@@ -165,3 +165,11 @@ TOPIC_EVICTIONS = "wi.sched.evictions"
 # (§4: the workload half of the bidirectional loop — e.g. "done draining,
 # take the VM early").
 TOPIC_EVENT_ACKS = "wi.events.acks"
+# Unannounced hardware failures, published by the scheduler's repair loop
+# once it notices a crashed VM (no notice preceded these — the platform
+# only learns of them after the fact).
+TOPIC_FAILURES = "wi.sched.failures"
+# Local-manager lease expiries: a guest that stopped heartbeating is
+# declared silent so the platform stops waiting for its ack and lets the
+# eviction ladder run to the kill deadline.
+TOPIC_LEASES = "wi.events.leases"

@@ -38,6 +38,12 @@ class VMEndpoint:
         # VM (e.g. a YARN RM) may assert workload-wide runtime hints
         self._workload_manager = workload_manager
 
+    def heartbeat(self):
+        """Liveness signal to the host (the lease the local manager tracks).
+        Hint writes and acks count as implicit heartbeats; an agent with
+        nothing to say calls this periodically."""
+        self._local.heartbeat(self.vm_id)
+
     def set_runtime_hints(self, hint_dict: Dict[str, Any],
                           workload_wide: bool = False) -> bool:
         """KVP/XenStore-style hint write.  ``workload_wide`` asserts the
@@ -77,7 +83,8 @@ class VMEndpoint:
 
 class LocalManager:
     def __init__(self, server_id: str, bus: Bus, clock=None,
-                 vm_hint_rate_per_s: float = 2.0, vm_hint_burst: float = 10.0):
+                 vm_hint_rate_per_s: float = 2.0, vm_hint_burst: float = 10.0,
+                 lease_s: float = 0.0):
         self.server_id = server_id
         self.bus = bus
         self.clock = clock or (lambda: 0.0)
@@ -87,6 +94,11 @@ class LocalManager:
         self.stats = defaultdict(int)
         self._acks: Dict[int, set] = defaultdict(set)
         self._vm_acks: Dict[str, set] = defaultdict(set)    # vm -> seqs
+        # heartbeat lease (0 disables): vm -> last sign of life; expired
+        # guests are declared silent exactly once per silence episode
+        self.lease_s = lease_s
+        self._last_seen: Dict[str, float] = {}
+        self._lease_lost: set = set()
         bus.subscribe(H.TOPIC_PLATFORM_HINTS, self._on_platform_hint)
 
     # -- VM lifecycle -------------------------------------------------------
@@ -94,6 +106,8 @@ class LocalManager:
                   workload_manager: bool = False) -> VMEndpoint:
         ep = VMEndpoint(vm_id, workload, self, workload_manager)
         self._vms[vm_id] = ep
+        self._last_seen[vm_id] = self.clock()
+        self._lease_lost.discard(vm_id)
         return ep
 
     def authorize_workload_manager(self, vm_id: str, on: bool = True):
@@ -109,6 +123,8 @@ class LocalManager:
         without bound."""
         self._vms.pop(vm_id, None)
         self._limiter.forget((vm_id,))
+        self._last_seen.pop(vm_id, None)
+        self._lease_lost.discard(vm_id)
         for seq in self._vm_acks.pop(vm_id, ()):
             acked = self._acks.get(seq)
             if acked is not None:
@@ -116,10 +132,41 @@ class LocalManager:
                 if not acked:
                     del self._acks[seq]
 
+    # -- heartbeat lease ----------------------------------------------------
+    def heartbeat(self, vm_id: str):
+        if vm_id in self._vms:
+            self._last_seen[vm_id] = self.clock()
+            self._lease_lost.discard(vm_id)
+
+    def check_leases(self, now=None) -> List[str]:
+        """Declare guests silent whose lease expired (no heartbeat, hint,
+        or ack within ``lease_s``).  One ``lease_expired`` record per
+        silence episode goes to ``wi.events.leases`` so the scheduler can
+        stop redelivering notices to them; a later sign of life clears the
+        flag and re-arms the lease."""
+        if self.lease_s <= 0.0:
+            return []
+        now = self.clock() if now is None else now
+        expired: List[str] = []
+        for vm_id, ep in self._vms.items():
+            if vm_id in self._lease_lost:
+                continue
+            seen = self._last_seen.get(vm_id, now)
+            if now - seen > self.lease_s:
+                self._lease_lost.add(vm_id)
+                self.stats["leases_expired"] += 1
+                expired.append(vm_id)
+                self.bus.publish(H.TOPIC_LEASES, {
+                    "event": "lease_expired", "vm": vm_id,
+                    "server": self.server_id, "workload": ep.workload,
+                    "last_seen_t": seen, "t": now}, key=vm_id)
+        return expired
+
     # -- guest -> platform ------------------------------------------------------
     def _vm_hint(self, ep: VMEndpoint, hint_dict: Dict[str, Any],
                  workload_wide: bool = False) -> bool:
         vm_id, workload = ep.vm_id, ep.workload
+        self.heartbeat(vm_id)           # any hint write is a sign of life
         if workload_wide and not ep._workload_manager:
             # any guest can hint about itself; only the designated
             # workload-manager VM may speak for the whole workload
@@ -165,6 +212,7 @@ class LocalManager:
                      event: Optional[Dict[str, Any]] = None):
         """Record a guest ack and forward it onto the bus so the platform
         can react (the eviction pipeline releases acked VMs early)."""
+        self.heartbeat(vm_id)           # an ack is a sign of life
         self._acks[seq].add(vm_id)
         self._vm_acks[vm_id].add(seq)
         self.stats["events_acked"] += 1
@@ -174,6 +222,12 @@ class LocalManager:
             ack["event"] = event.get("event")
             ack["resource"] = event.get("resource")
             ack["workload"] = event.get("workload")
+            # the deadline the guest believes it is acking: pins the ack to
+            # its ticket generation at the pipeline (lossy channels can
+            # deliver acks arbitrarily late)
+            kill_t = event.get("payload", {}).get("kill_t")
+            if kill_t is not None:
+                ack["kill_t"] = kill_t
         self.bus.publish(H.TOPIC_EVENT_ACKS, ack, key=vm_id)
 
     def acked(self, seq: int) -> set:

@@ -65,14 +65,30 @@ class ConsistencyChecker:
         self._clock = clock
         self.window_s, self.max_flips, self.max_jump = (window_s, max_flips,
                                                         max_jump)
-        self._hist: Dict[Tuple[str, str], collections.deque] = \
+        self._hist: Dict[Tuple[str, str, str], collections.deque] = \
             collections.defaultdict(lambda: collections.deque(maxlen=64))
         self._pending_evictions: set = set()
+        # (workload, resource) -> hint keys with history, so forget() can
+        # drop a dead resource's entries without scanning every key ever
+        # seen (under 100k-VM churn _hist would otherwise grow unboundedly)
+        self._keys_by_resource: Dict[Tuple[str, str], set] = {}
 
     def note_eviction_pending(self, resource: str):
         self._pending_evictions.add(resource)
 
     def note_eviction_done(self, resource: str):
+        self._pending_evictions.discard(resource)
+
+    def forget(self, workload: str, resource: str):
+        """Drop all consistency history for a resource that no longer
+        exists (its VM was killed, crashed, or released) — mirrors
+        ``RateLimiter.forget``.  Workload-level ('*') history survives."""
+        if resource == "*":
+            return
+        keys = self._keys_by_resource.pop((workload, resource), None)
+        if keys:
+            for k in keys:
+                self._hist.pop((workload, resource, k), None)
         self._pending_evictions.discard(resource)
 
     def check(self, workload: str, resource: str,
@@ -108,6 +124,10 @@ class ConsistencyChecker:
                     if abs(v - vals[-1]) > self.max_jump * max(span, 1.0):
                         return ConsistencyVerdict(False,
                                                   f"implausible jump on {k}")
+        if hints:
+            idx = self._keys_by_resource.setdefault((workload, resource),
+                                                    set())
+            idx.update(hints)
         for k, v in hints.items():
             self._hist[(workload, resource, k)].append((now, v))
         return ConsistencyVerdict(True)

@@ -82,17 +82,38 @@ class Store:
             self._snapshot()
 
     def _snapshot(self):
+        """Checkpoint memory to snapshot.json and truncate the WAL — in an
+        order that cannot lose committed writes.  The tmp file (and, under
+        ``fsync=True``, the directory entry from ``os.replace``) is made
+        durable BEFORE the WAL is truncated: a crash anywhere in between
+        leaves either the old snapshot + full WAL or the new snapshot +
+        stale WAL (replay skips records with ``seq <= snapshot.seq``), both
+        of which recover every committed write."""
         if self._root is None:
             return
         tmp = self._root / "snapshot.json.tmp"
-        tmp.write_text(json.dumps(
-            {"seq": self._seq,
-             "kv": {k: list(v) for k, v in self._mem.items()}}))
+        with tmp.open("w") as fh:
+            fh.write(json.dumps(
+                {"seq": self._seq,
+                 "kv": {k: list(v) for k, v in self._mem.items()}}))
+            fh.flush()
+            if self._fsync:
+                os.fsync(fh.fileno())
         os.replace(tmp, self._root / "snapshot.json")
-        # truncate WAL (atomically recreate)
+        if self._fsync:
+            # the rename itself must survive: fsync the directory
+            dfd = os.open(self._root, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        # only now is it safe to drop the WAL (atomically recreate)
         if self._wal is not None:
             self._wal.close()
-        (self._root / "wal.log").write_text("")
+        with (self._root / "wal.log").open("w") as fh:
+            if self._fsync:
+                fh.flush()
+                os.fsync(fh.fileno())
         self._wal = (self._root / "wal.log").open("a")
         self._writes_since_snap = 0
 

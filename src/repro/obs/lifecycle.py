@@ -74,10 +74,13 @@ class LifecycleObserver:
         self._backlog = r.gauge(
             "wi_sched_decision_batch_n",
             "size of the most recent decision batch per kind")
+        # crashed vm -> crash_t, awaiting its replacement placement (MTTR)
+        self._crashes: Dict[str, float] = {}
         self._unsubs = [
             bus.subscribe(H.TOPIC_EVICTIONS, self._on_eviction),
             bus.subscribe(H.TOPIC_EVENT_ACKS, self._on_ack),
             bus.subscribe(H.TOPIC_SCHED_DECISIONS, self._on_decisions),
+            bus.subscribe(H.TOPIC_FAILURES, self._on_failure),
         ]
 
     def close(self) -> None:
@@ -126,7 +129,7 @@ class LifecycleObserver:
                 self._observe_ack(vm, t_ack)
             return
         if event in ("evicted", "early_released", "cancelled",
-                     "already_gone"):
+                     "already_gone", "crashed"):
             self._count(event, cls)
             note = self._notices.pop(vm, None)
             if note is not None:
@@ -199,6 +202,26 @@ class LifecycleObserver:
                 "acks that arrived after the notice window expired",
                 workload_class=cls).inc()
 
+    def _on_failure(self, rec) -> None:
+        """Unannounced hardware failure published by the repair loop:
+        count it, observe how long the crash sat undetected, and open an
+        MTTR window that the crashed VM's replacement placement closes."""
+        d = rec.value
+        if not isinstance(d, dict) or d.get("event") != "crashed":
+            return
+        cls = self.classify(d.get("workload", ""))
+        self._count("crashed_vm", cls)
+        crash_t = float(d.get("crash_t", d.get("t", 0.0)))
+        self._hist("wi_lifecycle_crash_detect_s",
+                   "crash instant -> repair-loop detection", cls).observe(
+                       max(0.0, float(d.get("t", 0.0)) - crash_t))
+        self._crashes[d.get("vm", "")] = crash_t
+
+    # replacements are named "<original>.r<seq>"; strip ONE replacement
+    # suffix so a replacement-of-a-replacement resolves to its immediate
+    # parent (whose own crash opened the MTTR window)
+    _REPL_RE = re.compile(r"\.r\d+$")
+
     def _on_decisions(self, rec) -> None:
         d = rec.value
         if not isinstance(d, dict):
@@ -210,6 +233,25 @@ class LifecycleObserver:
             "scheduler decision records by kind", kind=kind).inc(n)
         self._backlog.set(n)
         self.registry.gauge("wi_sched_decision_batch_n", kind=kind).set(n)
+        if kind != "place" or not self._crashes:
+            return
+        t = float(d.get("t", 0.0))
+        for dec in d.get("decisions", ()):
+            if hasattr(dec, "server"):
+                vid, workload, server = dec.vm_id, dec.workload, dec.server
+            else:                   # row round-tripped as a plain array
+                vid = dec[0] if dec else ""
+                workload = dec[1] if len(dec) > 1 else ""
+                server = dec[2] if len(dec) > 2 else ""
+            if not server or not vid:
+                continue
+            base = self._REPL_RE.sub("", vid)
+            crash_t = self._crashes.pop(base, None)
+            if crash_t is not None:
+                self._hist("wi_lifecycle_mttr_s",
+                           "crash instant -> replacement placed",
+                           self.classify(workload)).observe(
+                               max(0.0, t - crash_t))
 
     # -- aggregation ---------------------------------------------------------
     def _counter_total(self, name: str, **match) -> float:
@@ -280,6 +322,10 @@ class LifecycleObserver:
                                              event="cancelled"),
             "already_gone": self._counter_total("wi_lifecycle_events_total",
                                                 event="already_gone"),
+            "crashed": self._counter_total("wi_lifecycle_events_total",
+                                           event="crashed"),
+            "crashed_vms": self._counter_total("wi_lifecycle_events_total",
+                                               event="crashed_vm"),
             "violations": self._counter_total(
                 "wi_lifecycle_violations_total"),
             "late_acks": self._counter_total("wi_lifecycle_late_acks_total"),
@@ -292,6 +338,9 @@ class LifecycleObserver:
             "ack_to_release_s": self._hist_summary(
                 "wi_lifecycle_ack_to_release_s"),
             "kill_lead_s": self._hist_summary("wi_lifecycle_kill_lead_s"),
+            "crash_detect_s": self._hist_summary(
+                "wi_lifecycle_crash_detect_s"),
+            "mttr_s": self._hist_summary("wi_lifecycle_mttr_s"),
         }
 
     def reconcile(self, pipeline) -> Dict[str, Any]:
@@ -305,6 +354,7 @@ class LifecycleObserver:
             "early_released": pipeline.stats.get("early_releases", 0),
             "cancelled": pipeline.stats.get("cancellations", 0),
             "already_gone": pipeline.stats.get("already_gone", 0),
+            "crashed": pipeline.stats.get("crashed", 0),
             "violations": len(pipeline.violations()),
         }
         diffs = {k: (s[k], truth[k]) for k in truth if s[k] != truth[k]}

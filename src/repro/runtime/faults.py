@@ -1,47 +1,11 @@
-"""Fault / platform-event injection: the UNIT-TEST SHIM for trainer tests.
+"""Back-compat shim: ``FaultInjector`` moved to ``repro.chaos.injector``.
 
-Drives the same platform-hint *topic* the real optimization policies use —
-the injector publishes EVICTION_NOTICE / SCALE_UP_OFFER / THROTTLE_NOTICE
-through the global manager and the standalone-mode ``WITrainer`` reacts to
-them — but nothing here books eviction tickets, honors notice windows, or
-frees capacity.  The REAL path is the scheduler substrate: the
-``ai_training`` case study and ``agents.trainer_agent`` attach the trainer
-to VMs placed by ``repro.sched.Scheduler``, whose ``EvictionPipeline``
-produces these events with a deadline ladder and an ack -> early-release
-loop (see docs/ARCHITECTURE.md).  Keep this class for fast single-process
-tests (``tests/test_runtime_elastic.py``) and examples only.
+This module keeps the old import path working for
+``tests/test_runtime_elastic.py`` and the examples.  For real fault
+injection — seeded channel faults, unannounced hardware crashes,
+misbehaving guests — use ``repro.chaos`` (FaultPlan / ChaosBus /
+CrashInjector) against the scheduler substrate; see docs/RESILIENCE.md.
 """
-from __future__ import annotations
+from repro.chaos.injector import FaultInjector
 
-from typing import Dict, Optional
-
-from repro.core import hints as H
-from repro.core.global_manager import GlobalManager
-
-
-class FaultInjector:
-    def __init__(self, gm: GlobalManager, workload: str,
-                 resource: str = "rack0/host0/vm0"):
-        self.gm, self.workload, self.resource = gm, workload, resource
-
-    def _emit(self, event: H.PlatformEvent, deadline_s=0.0, **payload):
-        ok = self.gm.publish_platform_hint(H.PlatformHint(
-            event=event.value, workload=self.workload, resource=self.resource,
-            deadline_s=deadline_s, payload=payload, source_opt="fault-inject"))
-        assert ok, "platform hint rate limited during fault injection"
-
-    def evict(self, n_devices: int, deadline_s: float = 30.0):
-        self._emit(H.PlatformEvent.EVICTION_NOTICE, deadline_s,
-                   n_devices=n_devices)
-
-    def offer_capacity(self, n_devices: int):
-        self._emit(H.PlatformEvent.SCALE_UP_OFFER, n_devices=n_devices)
-
-    def throttle(self, frac: float = 0.5):
-        self._emit(H.PlatformEvent.THROTTLE_NOTICE, frac=frac)
-
-    def unthrottle(self):
-        self._emit(H.PlatformEvent.OVERCLOCK_OFFER, boost_frac=0.0)
-
-    def maintenance(self, deadline_s: float = 60.0):
-        self._emit(H.PlatformEvent.MAINTENANCE, deadline_s)
+__all__ = ["FaultInjector"]

@@ -22,7 +22,7 @@ The trainer runs in one of two modes:
   * **standalone** (default, ``standalone=True``) — it owns a
     ``LocalManager``/``VMEndpoint`` pair for a single synthetic VM and
     drains platform events itself.  This is the unit-test path driven by
-    ``runtime.faults.FaultInjector``.
+    ``repro.chaos.FaultInjector``.
   * **scheduler tenant** (``standalone=False``) — the training job's VMs
     are placed, noticed, and killed by the real platform scheduler
     (``repro.sched``), and ``repro.agents.trainer_agent.TrainerTenant``
@@ -42,7 +42,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.ckpt.checkpoint import Checkpointer
+from repro.ckpt.checkpoint import Checkpointer, CheckpointCorruptError
 from repro.configs.base import (ModelConfig, ParallelConfig, RunConfig,
                                 pconfig_replace)
 from repro.core import hints as H
@@ -143,10 +143,17 @@ class WITrainer:
         self.dp = dp
 
     def _init_state(self):
-        latest = self.ckpt.latest_step()
-        if latest is not None:
-            self._restore(latest)
-            return
+        # newest committed checkpoint first; a corrupt/torn one (crash mid
+        # emergency checkpoint) falls back to the previous durable
+        # generation — lost work is bounded by the checkpoint interval, the
+        # job never bricks on a bad restore
+        for ck_step in reversed(self.ckpt.committed_steps()):
+            try:
+                self._restore(ck_step)
+                return
+            except CheckpointCorruptError:
+                self.events_log.append({"kind": "corrupt_checkpoint_skipped",
+                                        "step": ck_step})
         self.params = jax.device_put(
             Mdl.init_params(self.cfg, jax.random.PRNGKey(self.rcfg.seed)),
             self.pshard)

@@ -32,6 +32,16 @@ from repro.sim.cluster import Cluster
 from repro.sim.engine import Engine
 
 DEFAULT_NOTICE_S = 30.0             # paper §2.2: Spot eviction notice
+# Notice redelivery (lossy guest channels): capped exponential backoff
+# until the guest acks, goes silent (lease expired), or the deadline
+# arrives.  The first redelivery comes at notice/8 clamped to this band,
+# then doubles up to the cap — a dropped first notice is retried quickly
+# without spamming slow-but-honest guests.
+REMIND_BASE_S = 2.0
+REMIND_CAP_S = 16.0
+# Ack dedup window: (vm, seq) pairs already honored.  Bounds memory under
+# duplicate-heavy chaos runs; 4096 outstanding acks is far beyond any wave.
+_ACK_SEEN_MAX = 4096
 
 
 def notice_window_s(eff_hints: Dict[str, Any],
@@ -57,8 +67,9 @@ class EvictionTicket:
     killed: bool = False
     killed_t: float = -1.0
     # how the ticket resolved: pending | killed | early_released |
-    # cancelled | already_gone.  ``killed``/``cancelled`` stay in sync for
-    # existing callers; ``already_gone`` tickets never count as kills.
+    # cancelled | already_gone | crashed.  ``killed``/``cancelled`` stay in
+    # sync for existing callers; ``already_gone``/``crashed`` tickets never
+    # count as kills (the pipeline did not perform them).
     outcome: str = "pending"
 
     @property
@@ -87,6 +98,13 @@ class EvictionPipeline:
         # for a ticket issued at that same instant and purged otherwise.
         self._acked_ahead: Dict[str, float] = {}
         self._in_submit = False         # defer in-wave acks (see on_ack)
+        # dedup-by-seq: ack records already honored, so a duplicated or
+        # re-delivered bus record can never double-release (insertion
+        # order doubles as the eviction queue for bounding)
+        self._acks_seen: Dict[tuple, None] = {}
+        # guests whose local-manager lease expired: stop redelivering
+        # notices to them; the ladder kill at the deadline stands
+        self._silent: set = set()
 
     # -- intake -------------------------------------------------------------
     def submit(self, actions: List, source: str = "sched"
@@ -158,28 +176,49 @@ class EvictionPipeline:
             notice_sink.append((vm.vm_id, notice_rec))
         else:
             self.gm.bus.publish(H.TOPIC_EVICTIONS, notice_rec, key=vm.vm_id)
-        # deadline ladder: reminder at half window, kill at the deadline
+        # deadline ladder: redeliveries on capped exponential backoff until
+        # the guest acks (ticket resolves) or the deadline; the kill is
+        # armed exactly at the deadline
         if notice > 0:
-            self.engine.at(now + notice / 2.0,
-                           lambda t=ticket: self._remind(t))
+            d0 = min(max(notice / 8.0, REMIND_BASE_S), REMIND_CAP_S)
+            self.engine.at(now + d0,
+                           lambda t=ticket, d=d0: self._remind(t, d))
         self.engine.at(ticket.kill_t, lambda t=ticket: self._kill(t))
         self.stats["notices"] += 1
         return ticket
 
     # -- ladder -------------------------------------------------------------
-    def _remind(self, ticket: EvictionTicket):
-        if ticket.cancelled or ticket.killed:
+    def _remind(self, ticket: EvictionTicket, delay: float = 0.0):
+        """Redeliver a pending notice.  The payload repeats everything the
+        original carried (notice_s / kill_t) because on a lossy channel the
+        redelivery may be the first copy the guest ever sees."""
+        if ticket.outcome != "pending":
             return
+        if ticket.vm_id in self._silent:
+            return      # lease expired: nobody is listening; ladder stands
         remaining = ticket.kill_t - self.engine.clock.t
         self.gm.publish_platform_hint(H.PlatformHint(
             event=H.PlatformEvent.EVICTION_NOTICE.value,
             workload=ticket.workload, resource=ticket.resource,
-            deadline_s=remaining, payload={"reminder": True},
+            deadline_s=remaining,
+            payload={"reminder": True, "notice_s": ticket.notice_s,
+                     "kill_t": ticket.kill_t, "source": ticket.source},
             source_opt="evictor"))
         self.stats["reminders"] += 1
+        next_d = min(max(delay, REMIND_BASE_S) * 2.0, REMIND_CAP_S)
+        if self.engine.clock.t + next_d < ticket.kill_t - 1e-9:
+            self.engine.after(next_d,
+                              lambda t=ticket, d=next_d: self._remind(t, d))
+
+    def note_silent(self, vm_id: str):
+        """The guest's lease expired: suppress further redeliveries (a
+        later ack — the guest came back — re-enables them implicitly by
+        releasing the ticket)."""
+        self._silent.add(vm_id)
+        self.stats["silent_guests"] += 1
 
     def _kill(self, ticket: EvictionTicket):
-        if ticket.cancelled or ticket.killed:
+        if ticket.outcome != "pending":
             return
         with self.tracer.span("evict.kill", cat="evict", vm=ticket.vm_id):
             self._kill_live(ticket)
@@ -200,6 +239,7 @@ class EvictionPipeline:
             ticket.outcome = "already_gone"
             ticket.killed_t = self.engine.clock.t
             self.tickets.pop(ticket.vm_id, None)
+            self._silent.discard(ticket.vm_id)
             self.gm.checker.note_eviction_done(ticket.resource)
             self.gm.purge_resource_hints(ticket.workload, ticket.resource)
             self.gm.bus.publish(H.TOPIC_EVICTIONS, {
@@ -217,6 +257,7 @@ class EvictionPipeline:
         ticket.outcome = "killed"
         ticket.killed_t = self.engine.clock.t
         self.tickets.pop(ticket.vm_id, None)
+        self._silent.discard(ticket.vm_id)
         self.gm.checker.note_eviction_done(ticket.resource)
         # the resource is gone: per-VM hint state must not outlive it
         self.gm.purge_resource_hints(ticket.workload, ticket.resource)
@@ -229,14 +270,37 @@ class EvictionPipeline:
         self.stats["kills"] += 1
 
     # -- guest acks: release before the deadline ----------------------------
-    def on_ack(self, vm_id: str, t: float) -> bool:
+    def on_ack(self, vm_id: str, t: float, seq=None, kill_t=None) -> bool:
         """A guest acknowledged an eviction notice.  Release its ticket if
         one is booked; otherwise remember the ack — the authoritative
         ticket may be created later in the same synchronous wave (managers
         pre-notify before the pipeline books).  Acks arriving mid-wave are
         always deferred to ``submit``'s epilogue so the release record
-        never beats the wave's batched notice records onto the bus."""
-        if not self._in_submit and vm_id in self.tickets:
+        never beats the wave's batched notice records onto the bus.
+
+        Lossy-channel discipline: ``seq`` (the notice's event sequence)
+        dedups duplicated/re-delivered ack records — each honored at most
+        once; ``kill_t`` (the deadline the guest was acking) pins the ack
+        to its ticket generation, so a delayed ack from a long-dead notice
+        can never release a *later* ticket booked for the same VM id."""
+        if seq is not None:
+            k = (vm_id, seq)
+            if k in self._acks_seen:
+                self.stats["acks_deduped"] += 1
+                return False
+            self._acks_seen[k] = None
+            if len(self._acks_seen) > _ACK_SEEN_MAX:
+                # evict the oldest entries (dict preserves insertion order)
+                for old in list(self._acks_seen)[:_ACK_SEEN_MAX // 4]:
+                    del self._acks_seen[old]
+        self._silent.discard(vm_id)     # the guest is evidently alive
+        ticket = self.tickets.get(vm_id)
+        if (ticket is not None and kill_t is not None
+                and abs(float(kill_t) - ticket.kill_t) > 1e-6):
+            # an ack for a different (older) generation of this VM id
+            self.stats["acks_stale_generation"] += 1
+            return False
+        if not self._in_submit and ticket is not None:
             return self.early_release(vm_id)
         now = self.engine.clock.t
         # acks from earlier instants can never match a future ticket:
@@ -254,7 +318,7 @@ class EvictionPipeline:
         idling until the deadline.  The pending ladder kill becomes a no-op.
         Consented releases are not notice-window violations."""
         ticket = self.tickets.get(vm_id)
-        if ticket is None or ticket.killed or ticket.cancelled:
+        if ticket is None or ticket.outcome != "pending":
             return False
         with self.tracer.span("evict.early_release", cat="evict", vm=vm_id):
             return self._early_release(ticket)
@@ -273,6 +337,7 @@ class EvictionPipeline:
         ticket.outcome = "early_released"
         ticket.killed_t = self.engine.clock.t
         self.tickets.pop(vm_id, None)
+        self._silent.discard(vm_id)
         self.gm.checker.note_eviction_done(ticket.resource)
         self.gm.purge_resource_hints(ticket.workload, ticket.resource)
         self.gm.bus.publish(H.TOPIC_EVICTIONS, {
@@ -291,12 +356,36 @@ class EvictionPipeline:
             return False
         ticket.cancelled = True
         ticket.outcome = "cancelled"
+        self._silent.discard(vm_id)
         self.gm.checker.note_eviction_done(ticket.resource)
         self.gm.bus.publish(H.TOPIC_EVICTIONS, {
             "event": "cancelled", "vm": vm_id, "workload": ticket.workload,
             "resource": ticket.resource, "t": self.engine.clock.t},
             key=vm_id)
         self.stats["cancellations"] += 1
+        return True
+
+    # -- unannounced failures (scheduler repair loop) ------------------------
+    def on_crashed(self, vm_id: str, t: float) -> bool:
+        """The VM hardware-crashed while under notice: close the ticket as
+        ``crashed`` (not a kill the pipeline performed — it never feeds
+        lead-time/violation stats).  Called by the repair loop with the
+        actual crash time, so the recorded instant matches the billing
+        close."""
+        ticket = self.tickets.pop(vm_id, None)
+        if ticket is None or ticket.outcome != "pending":
+            return False
+        ticket.outcome = "crashed"
+        ticket.killed_t = t
+        self._silent.discard(vm_id)
+        self.gm.checker.note_eviction_done(ticket.resource)
+        self.gm.purge_resource_hints(ticket.workload, ticket.resource)
+        self.gm.bus.publish(H.TOPIC_EVICTIONS, {
+            "event": "crashed", "vm": vm_id, "workload": ticket.workload,
+            "resource": ticket.resource, "t": t, "source": ticket.source},
+            key=vm_id)
+        self.log.append(ticket)
+        self.stats["crashed"] += 1
         return True
 
     # -- invariants ---------------------------------------------------------

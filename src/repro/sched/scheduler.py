@@ -117,6 +117,8 @@ class Scheduler:
         # its eviction notice is released (and its capacity freed) before
         # the deadline instead of idling until the ladder kill
         self.gm.bus.subscribe(H.TOPIC_EVENT_ACKS, self._on_event_ack)
+        # silent-guest declarations from local managers (lease expiries)
+        self.gm.bus.subscribe(H.TOPIC_LEASES, self._on_lease)
         # direct-store hint path (set_hints with runtime scope never hits
         # the bus) — without this the placer would keep serving stale hints
         self.gm.hint_listeners.append(self._mark_dirty)
@@ -171,9 +173,21 @@ class Scheduler:
             # the authoritative resolution count lives in
             # evictor.stats["early_releases"] (acks that resolve during a
             # wave are deferred to submit's epilogue and would be missed
-            # by any counting done here)
+            # by any counting done here).  seq + kill_t ride along so the
+            # pipeline can dedup duplicated ack records and refuse acks
+            # aimed at an older ticket generation (lossy channels).
             self.evictor.on_ack(d.get("vm", ""),
-                                float(d.get("t", self.engine.clock.t)))
+                                float(d.get("t", self.engine.clock.t)),
+                                seq=d.get("seq"), kill_t=d.get("kill_t"))
+
+    def _on_lease(self, rec):
+        """A guest stopped heartbeating: its local manager published a
+        lease expiry.  Mark it silent so the evictor stops redelivering
+        notices; the ladder kill at the deadline still stands."""
+        d = rec.value
+        if isinstance(d, dict) and d.get("event") == "lease_expired":
+            self.evictor.note_silent(d.get("vm", ""))
+            self.stats["silent_guests"] += 1
 
     def react_to_hints(self) -> List[Decision]:
         """Re-place VMs of workloads whose hints changed: a workload that is
@@ -267,6 +281,7 @@ class Scheduler:
 
     def tick(self):
         with self.tracer.span("sched.tick", t_sim=self.engine.clock.t):
+            self.repair_failures()
             self.react_to_hints()
             if self.policy_period_s > 0 and \
                     self.engine.clock.t >= self._next_policy_t:
@@ -274,6 +289,42 @@ class Scheduler:
                     self.engine.clock.t + self.policy_period_s
                 self.run_policies(self.engine.clock.t)
             self.schedule_pending()
+
+    # -- crash repair loop ---------------------------------------------------
+    def repair_failures(self) -> int:
+        """Close the books on unannounced hardware crashes the cluster
+        queued since the last tick: release placement + admission state,
+        resolve any in-flight eviction ticket as ``crashed``, purge the
+        dead resource's hints and safety history, and publish the failure
+        on ``wi.sched.failures`` (detection latency = crash -> this tick).
+        Agents react to the failure record by requesting replacements with
+        backoff; billing already closed at crash time via the cluster's
+        kill listeners."""
+        crashed = self.cluster.drain_crashed()
+        if not crashed:
+            return 0
+        now = self.engine.clock.t
+        with self.tracer.span("sched.repair_failures", cat="evict",
+                              n=len(crashed)):
+            for vm, crash_t in crashed:
+                # resource identity BEFORE unplace wipes vm.server
+                resource = f"{vm.server}/{vm.vm_id}"
+                self.placer.unplace(vm)
+                if not self.evictor.on_crashed(vm.vm_id, crash_t):
+                    # no ticket was in flight: the evictor's terminal path
+                    # did not run, so close safety/hint state here
+                    self.gm.checker.forget(vm.workload, resource)
+                    self.gm.purge_resource_hints(vm.workload, resource)
+                self.gm.bus.publish(H.TOPIC_FAILURES, {
+                    "event": "crashed", "vm": vm.vm_id,
+                    "workload": vm.workload, "resource": resource,
+                    "server": resource.rsplit("/", 1)[0],
+                    "crash_t": crash_t, "t": now}, key=vm.vm_id)
+                self.stats["crashed_vms"] += 1
+        self.metrics.counter(
+            "wi_sched_crashed_vms_total",
+            "unannounced VM crashes repaired").inc(len(crashed))
+        return len(crashed)
 
     # -- the periodic optimization pass -------------------------------------
     def run_policies(self, now: Optional[float] = None):

@@ -1,0 +1,487 @@
+"""Scenario: the full WI loop under chaos — and every invariant still holds.
+
+A diurnal fleet (stateless web frontends, stateful bigdata, an elastic
+training tenant, and four deliberately *rogue* workloads) runs the usual
+storm of spot-reclaim waves and power events, but this time:
+
+  * every guest-facing channel is lossy: eviction notices, guest acks, and
+    runtime hints are dropped / duplicated / delayed / reordered by a
+    seeded ``FaultPlan`` through ``ChaosBus`` (the platform's own decision
+    / eviction / failure topics stay transactional — the plan refuses to
+    fault them);
+  * servers and VMs hardware-crash *unannounced* (no notice, no event):
+    the scheduler's repair loop detects them at its next tick, closes the
+    books, publishes ``wi.sched.failures``, and agents request
+    replacements with per-workload backoff;
+  * four guests misbehave: one goes silent (never acks — the heartbeat
+    lease expires and the ladder kill stands), one acks slower than any
+    window, one hardware-crashes itself mid-checkpoint, one floods the
+    hint channel (the local manager's rate limiter absorbs it);
+  * the training tenant takes real emergency checkpoints through the real
+    ``Checkpointer``; after the run one is corrupted on disk and recovery
+    must fall back to the last *verified* generation, losing at most one
+    checkpoint interval of steps.
+
+Invariants asserted at the end of the soak (the PR's acceptance bars):
+
+  * zero notice-window violations among notices the pipeline delivered;
+  * the ``BillingMeter`` reconciles against the cluster's core-hour
+    integral (crashes close meters at the crash instant — no phantom
+    core-hours);
+  * ``LifecycleObserver.reconcile(pipeline)`` is clean with ``crashed``
+    outcomes counted, and every crash shows a finite detection latency
+    and (for replaceable classes) a finite MTTR;
+  * scale-out workloads converge back to at least their target replica
+    counts once the chaos stops;
+  * the trainer's lost work is bounded by its checkpoint interval even
+    through the corrupt-checkpoint drill;
+  * the cluster's incremental books survive (``assert_consistent``) — no
+    double release, no capacity leak.
+"""
+from __future__ import annotations
+
+import random
+import tempfile
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import obs
+from repro.agents import (STATEFUL, STATELESS, AgentPolicy, AgentRuntime,
+                          DiurnalProfile)
+from repro.agents.trainer_agent import TrainerTenant
+from repro.chaos import (ChaosBus, CrashInjector, FaultPlan,
+                         install_guest_modes, lossy_guest_plan)
+from repro.chaos import plan as CP
+from repro.core.bus import Bus
+from repro.core.global_manager import GlobalManager
+from repro.core.pricing import BillingMeter
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+from repro.sim.engine import Engine
+
+N_SERVERS_PER_REGION = 24
+CORES_PER_SERVER = 48
+TICK_S = 5.0
+PHASE_PERIOD_S = 300.0
+STORM_WAVES = 5
+WAVE_PERIOD_S = 120.0
+WAVE_CORES = 150.0
+POWER_EVENTS = 4
+LEASE_S = 45.0
+QUIET_TAIL_S = 300.0            # no new chaos in the last stretch: converge
+HORIZON_S = 60.0 + STORM_WAVES * WAVE_PERIOD_S + 2 * QUIET_TAIL_S
+
+N_WEB = 6
+WEB_VMS = 12
+N_BIGDATA = 4
+BIGDATA_VMS = 8
+ROGUE_VMS = 6
+TRAIN_VMS = 6
+TRAIN_STEP_S = 5.0
+TRAIN_CKPT_EVERY = 20
+
+DROP_P = 0.08
+DUP_P = 0.05
+DELAY_P = 0.05
+REORDER_P = 0.04
+CRASH_RATE_PER_S = 0.004        # expected ~1 background crash / 250 s
+
+ROGUE_MODES = {
+    "rogue-silent": CP.GUEST_NEVER_ACK,
+    "rogue-slow": CP.GUEST_SLOW_ACK,
+    "rogue-crash": CP.GUEST_CRASH_MID_CKPT,
+    "rogue-spam": CP.GUEST_HINT_SPAM,
+}
+
+
+class SimCkptTrainer:
+    """A trainer-shaped tenant backend exercising the *real*
+    ``Checkpointer`` (crc-verified restore) without a real model: state is
+    a small numpy tree advanced one deterministic step at a time, saved
+    periodically and on every emergency checkpoint.  Implements the
+    surface ``TrainerTenant`` requires (``step_once`` /
+    ``resize_to_devices`` / ``set_throttled`` / ``emergency_checkpoint`` /
+    ``ckpt.wait``) plus the same corrupt-checkpoint recovery walk as
+    ``WITrainer._init_state``."""
+
+    def __init__(self, ckpt_dir: str, ckpt_every: int = TRAIN_CKPT_EVERY,
+                 min_devices: int = 2, n_params: int = 64):
+        from repro.ckpt.checkpoint import Checkpointer
+        # keep enough generations that an emergency-checkpoint burst can
+        # never GC the last periodic save the corruption drill falls
+        # back to
+        self.ckpt = Checkpointer(ckpt_dir, keep=8)
+        self.ckpt_every = ckpt_every
+        self.min_devices = min_devices
+        self.step = 0
+        self.state = {"w": np.zeros(n_params, dtype=np.float64)}
+        self.metrics_log: list = []
+        self.events_log: list = []
+        self.resizes = 0
+        self.throttled = False
+        self.recover()
+
+    # -- recovery (mirrors WITrainer._init_state) ----------------------------
+    def recover(self) -> Optional[int]:
+        from repro.ckpt.checkpoint import CheckpointCorruptError
+        for s in reversed(self.ckpt.committed_steps()):
+            try:
+                tree = self.ckpt.restore(s, {"w": self.state["w"]})
+                self.state = {"w": np.asarray(tree["w"])}
+                self.step = int(self.ckpt.metadata(s).get("step", s))
+                return s
+            except CheckpointCorruptError:
+                self.events_log.append(
+                    {"kind": "corrupt_checkpoint_skipped", "step": s})
+        return None
+
+    # -- TrainerTenant surface ----------------------------------------------
+    def step_once(self) -> Dict:
+        self.state["w"] = self.state["w"] + 1.0
+        self.step += 1
+        rec = {"step": self.step}
+        self.metrics_log.append(rec)
+        if self.step % self.ckpt_every == 0:
+            self._save()
+        return rec
+
+    def resize_to_devices(self, devices) -> bool:
+        if len(devices) < self.min_devices:
+            return False
+        self.resizes += 1
+        return True
+
+    def set_throttled(self, on: bool):
+        self.throttled = bool(on)
+
+    def emergency_checkpoint(self):
+        self._save()
+        self.events_log.append({"kind": "emergency_checkpoint",
+                                "step": self.step})
+
+    def _save(self):
+        self.ckpt.save(self.step, {"w": self.state["w"]},
+                       {"step": self.step})
+
+    def corrupt_newest(self) -> Optional[int]:
+        """Corrupt one leaf of the newest committed checkpoint on disk
+        (the drill: a torn emergency checkpoint must not brick the job)."""
+        newest = self.ckpt.latest_step()
+        if newest is None:
+            return None
+        leaf = next((self.ckpt.root / f"step_{newest}").glob("*.npy"))
+        leaf.write_bytes(b"torn write: not a numpy file")
+        return newest
+
+
+def build(seed: int = 0,
+          n_servers_per_region: int = N_SERVERS_PER_REGION,
+          vm_scale: float = 1.0,
+          drop_p: float = DROP_P, dup_p: float = DUP_P,
+          delay_p: float = DELAY_P, reorder_p: float = REORDER_P,
+          ckpt_dir: Optional[str] = None):
+    rng = random.Random(seed)
+    engine = Engine()
+    plan: FaultPlan = lossy_guest_plan(
+        seed=seed, drop_p=drop_p, dup_p=dup_p, delay_p=delay_p,
+        reorder_p=reorder_p, guest_modes=dict(ROGUE_MODES))
+    bus = ChaosBus(Bus(clock=engine.clock), plan, engine)
+    gm = GlobalManager(bus=bus, clock=engine.clock,
+                       hint_rate_per_s=1e6, hint_burst=1e6)
+    registry = obs.MetricsRegistry(enabled=True)
+    s = Scheduler(gm=gm, engine=engine, default_notice_s=30.0,
+                  metrics=registry)
+    s.lifecycle = obs.LifecycleObserver(gm.bus, registry=registry)
+    # the meter exists before the first placement so it observes every
+    # decision record; crashes close meters at the crash instant through
+    # the cluster's kill listeners
+    meter = BillingMeter(gm, s.cluster)
+    for r in ("region-0", "region-green"):
+        for i in range(n_servers_per_region):
+            s.cluster.add_server(f"{r}/s{i}", CORES_PER_SERVER, region=r)
+
+    policies: Dict[str, AgentPolicy] = {}
+
+    for i in range(N_WEB):
+        w = f"web-{i}"
+        s.gm.register_workload(w, {
+            "scale_out_in": True, "scale_up_down": True,
+            "preemptibility_pct": 70.0, "availability_nines": 3.0,
+            "delay_tolerance_ms": 5_000.0})
+        policies[w] = AgentPolicy(statefulness=STATELESS, scale_out_in=True)
+
+    diurnal_bigdata = DiurnalProfile(
+        peak_hints={"delay_tolerance_ms": 5_000.0,
+                    "preemptibility_pct": 20.0},
+        offpeak_hints={"delay_tolerance_ms": 120_000.0,
+                       "preemptibility_pct": 80.0})
+    for i in range(N_BIGDATA):
+        w = f"bigdata-{i}"
+        s.gm.register_workload(w, {
+            "scale_out_in": True, "scale_up_down": True,
+            "preemptibility_pct": 60.0, "availability_nines": 2.0,
+            "delay_tolerance_ms": 30_000.0,
+            "x-eviction-notice-s": 120.0})
+        policies[w] = AgentPolicy(statefulness=STATEFUL, state_gb=8.0,
+                                  ckpt_gbps=0.5, diurnal=diurnal_bigdata)
+
+    # the rogues: stateful (except the spammer — it evicts honestly, so
+    # the stateless-never-loses-work bar must keep holding for it)
+    for w in ROGUE_MODES:
+        # most-preemptible class: the first reclaim wave reaches them, so
+        # every misbehaving-guest drill actually fires
+        s.gm.register_workload(w, {
+            "scale_out_in": False, "scale_up_down": True,
+            "preemptibility_pct": 90.0, "availability_nines": 2.0})
+        if w == "rogue-spam":
+            policies[w] = AgentPolicy(statefulness=STATELESS,
+                                      scale_out_in=True)
+        else:
+            # small state: the mid-checkpoint self-crash (10 s write) fires
+            # well before the 30 s deadline
+            policies[w] = AgentPolicy(statefulness=STATEFUL, state_gb=2.0,
+                                      ckpt_gbps=0.2)
+    install_guest_modes(plan, policies)
+
+    # the elastic training tenant: real Checkpointer, VM->device mapping
+    tenant = TrainerTenant("train-0", devices=[f"d{i}" for i in range(16)],
+                           devices_per_vm=2, min_dp=2,
+                           emergency_ckpt_s=4.0)
+    s.gm.register_workload("train-0", {
+        "scale_out_in": True, "scale_up_down": True,
+        "preemptibility_pct": 80.0, "delay_tolerance_ms": 60_000.0})
+    policies["train-0"] = tenant.policy(state_gb=2.0, ckpt_gbps=0.5)
+
+    vm = 0
+    first_ids: Dict[str, str] = {}
+    for i in range(N_WEB):
+        for _ in range(max(1, round(WEB_VMS * vm_scale))):
+            first_ids.setdefault("web", f"vm{vm}")
+            s.submit(VM(f"vm{vm}", f"web-{i}", "", 4,
+                        util_p95=rng.uniform(0.2, 0.6), spot=True))
+            vm += 1
+    for i in range(N_BIGDATA):
+        for _ in range(max(1, round(BIGDATA_VMS * vm_scale))):
+            s.submit(VM(f"vm{vm}", f"bigdata-{i}", "", 8,
+                        util_p95=rng.uniform(0.3, 0.8), spot=True))
+            vm += 1
+    for w in ROGUE_MODES:
+        for _ in range(max(1, round(ROGUE_VMS * vm_scale))):
+            s.submit(VM(f"vm{vm}", w, "", 4,
+                        util_p95=rng.uniform(0.3, 0.7), spot=True))
+            vm += 1
+    for _ in range(TRAIN_VMS):
+        first_ids.setdefault("train", f"vm{vm}")
+        s.submit(VM(f"vm{vm}", "train-0", "", 8,
+                    util_p95=rng.uniform(0.5, 0.8), spot=True))
+        vm += 1
+    s.schedule_pending()
+
+    # rate-limit the guest hint channel tightly enough that the spammer's
+    # bursts actually hit the limiter (honest guests write far below it)
+    rt = AgentRuntime(s, policies=policies,
+                      vm_hint_rate_per_s=1.0, vm_hint_burst=10.0)
+
+    trainer = SimCkptTrainer(
+        ckpt_dir or tempfile.mkdtemp(prefix="wi-chaos-ckpt-"))
+    tenant.attach_trainer(trainer)
+
+    # the unannounced-failure schedule: one targeted web crash, one
+    # targeted trainer-VM crash (both before the first reclaim wave, while
+    # those exact VMs are still alive), one whole-server failure — plus
+    # seeded random background crashes armed in run().  Crash instants sit
+    # off the 5 s tick grid so detection latency is measured honestly.
+    plan.vm_crashes.extend([(33.7, first_ids["web"]),
+                            (48.3, first_ids["train"])])
+    plan.server_crashes.append((421.9, "region-0/s0"))
+    crasher = CrashInjector(s.cluster, engine, plan)
+    return s, rt, meter, tenant, trainer, plan, crasher
+
+
+def run(seed: int = 0,
+        n_servers_per_region: int = N_SERVERS_PER_REGION,
+        vm_scale: float = 1.0,
+        drop_p: float = DROP_P, dup_p: float = DUP_P,
+        delay_p: float = DELAY_P, reorder_p: float = REORDER_P,
+        crash_rate_per_s: float = CRASH_RATE_PER_S) -> Dict[str, float]:
+    rng = random.Random(seed + 1)
+    with tempfile.TemporaryDirectory(prefix="wi-chaos-") as ckpt_dir:
+        s, rt, meter, tenant, trainer, plan, crasher = build(
+            seed, n_servers_per_region, vm_scale,
+            drop_p, dup_p, delay_p, reorder_p, ckpt_dir=ckpt_dir)
+        horizon = HORIZON_S
+        initial = {w: sum(1 for v in s.cluster.vms.values()
+                          if v.workload.startswith(w) and v.alive)
+                   for w in ("web-", "train-")}
+
+        def flip_phase():
+            rt.set_phase("offpeak" if rt.phase == "peak" else "peak")
+        s.engine.every(PHASE_PERIOD_S, flip_phase, horizon)
+
+        for w in range(STORM_WAVES):
+            region = "region-0" if w % 2 == 0 else "region-green"
+            s.engine.at(61.0 + w * WAVE_PERIOD_S,
+                        lambda r=region: s.capacity_crunch(r, WAVE_CORES))
+        servers = list(s.cluster.servers)
+        for i in range(POWER_EVENTS):
+            srv = rng.choice(servers)
+            s.engine.at(93.0 + i * 110.0,
+                        lambda sv=srv: s.power_event(sv, shed_frac=0.4))
+
+        # unannounced failures: the targeted schedule plus background
+        # crashes, all stopping before the quiet tail so the fleet can
+        # converge back
+        crasher.arm()
+        if crash_rate_per_s > 0:
+            crasher.arm_random_vm_crashes(crash_rate_per_s,
+                                          until=horizon - QUIET_TAIL_S)
+
+        # heartbeat leases: the silent rogue is detected, redelivery stops
+        rt.enable_leases(LEASE_S, horizon, check_period_s=TICK_S)
+
+        # the training loop interleaved with the platform clock
+        def train_step():
+            tenant.apply_pending()
+            if tenant.paused or trainer is not tenant.trainer:
+                return
+            trainer.step_once()
+            if trainer.step % trainer.ckpt_every == 0:
+                tenant.note_durable()
+        s.engine.every(TRAIN_STEP_S, train_step, horizon)
+
+        s.start(TICK_S, horizon)
+        s.run_until(horizon)
+
+        # ---- the invariant wall -------------------------------------------
+        ev = s.evictor
+        life = s.lifecycle.summary()
+        recon = s.lifecycle.reconcile(ev)
+        assert recon["ok"], recon["diffs"]
+        violations = ev.violations()
+        assert not violations, [vars(t) for t in violations]
+        assert life["violations"] == 0
+
+        # books: metered core-hours == the cluster's own integral, crashes
+        # included (meters closed at the crash instant)
+        bill = meter.reconcile(horizon)
+        assert bill["abs_diff"] < max(1e-4, 1e-9 * bill[
+            "cluster_core_hours"]), bill
+
+        # every queued crash was repaired and published
+        assert s.stats.get("crashed_vms", 0) == s.cluster.crashes_total
+        assert life["crashed_vms"] == s.cluster.crashes_total
+        assert s.cluster.crashes_total > 0, "chaos run injected no crashes"
+        detect = life["crash_detect_s"]
+        assert detect["count"] == s.cluster.crashes_total
+        assert 0.0 < detect["max"] <= TICK_S + 1e-6, detect
+        mttr = life["mttr_s"]
+        assert mttr.get("count", 0) >= 1, "no crash was ever repaired"
+
+        # convergence: scale-out classes are back to >= target replicas
+        alive_by: Dict[str, int] = {}
+        for v in s.cluster.vms.values():
+            if v.alive and v.server:
+                key = v.workload.split("-")[0]
+                alive_by[key] = alive_by.get(key, 0) + 1
+        assert alive_by.get("web", 0) >= initial["web-"], \
+            (alive_by.get("web", 0), initial["web-"])
+        assert alive_by.get("train", 0) >= initial["train-"], \
+            (alive_by.get("train", 0), initial["train-"])
+
+        m = rt.telemetry()
+        # the stateless bar holds even under chaos: a noticed stateless VM
+        # is never killed without its consent having been *sent* (lost ack
+        # records are re-sent on redelivered notices)
+        assert m.get("stateless_killed_without_ack", 0.0) == 0.0
+        # every misbehaving-guest drill engaged: the silent rogue was
+        # detected (lease) and ignored at least one notice, the
+        # mid-checkpoint rogue hardware-crashed itself, and the spammer
+        # was rate-limited (some hints through, most rejected)
+        assert ev.stats.get("silent_guests", 0) >= 1
+        assert m.get("rogue_notices_ignored", 0) >= 1
+        assert m.get("rogue_self_crashes", 0) >= 1
+        assert 0 < m.get("spam_hints_accepted", 0) < m.get(
+            "spam_hints_sent", 0)
+        # the lossy channel was genuinely lossy and the ladder covered it
+        bus_stats = dict(s.gm.bus.stats)
+        assert bus_stats.get("dropped", 0) > 0
+        assert ev.stats.get("reminders", 0) > 0
+
+        # no double release / capacity leak anywhere in the books
+        s.cluster.assert_consistent()
+
+        # ---- corrupt-checkpoint drill -------------------------------------
+        # make the newest checkpoint durable at the final step, corrupt it,
+        # and recover: the fallback must land on the last *verified*
+        # generation, losing at most one checkpoint interval
+        steps_total = trainer.step
+        trainer.emergency_checkpoint()
+        corrupted_step = trainer.corrupt_newest()
+        recovered = SimCkptTrainer(ckpt_dir,
+                                   ckpt_every=trainer.ckpt_every)
+        skipped = [e for e in recovered.events_log
+                   if e["kind"] == "corrupt_checkpoint_skipped"]
+        assert corrupted_step is not None and skipped, \
+            "corruption drill never engaged"
+        lost_steps = steps_total - recovered.step
+        assert 0 < lost_steps <= trainer.ckpt_every, \
+            (steps_total, recovered.step, trainer.ckpt_every)
+
+        tm = tenant.telemetry()
+        return {
+            "horizon_s": horizon,
+            "placed": s.stats.get("placed", 0),
+            "violations": int(life["violations"]),
+            "notices": int(life["notices"]),
+            "killed": int(life["killed"]),
+            "early_released": int(life["early_released"]),
+            "already_gone": int(life["already_gone"]),
+            "cancelled": int(life["cancelled"]),
+            "crashed_tickets": int(life["crashed"]),
+            "crashed_vms": int(life["crashed_vms"]),
+            "crash_detect_p95_s": detect.get("p95", 0.0),
+            "crash_detect_max_s": detect["max"],
+            "mttr_count": int(mttr.get("count", 0)),
+            "mttr_p95_s": mttr.get("p95", 0.0),
+            "mttr_max_s": mttr.get("max", 0.0),
+            "reminders": ev.stats.get("reminders", 0),
+            "acks_deduped": ev.stats.get("acks_deduped", 0),
+            "acks_stale_generation": ev.stats.get(
+                "acks_stale_generation", 0),
+            "silent_guests": ev.stats.get("silent_guests", 0),
+            "leases_expired": m.get("leases_expired", 0.0),
+            "bus_dropped": bus_stats.get("dropped", 0),
+            "bus_duplicated": bus_stats.get("duplicated", 0),
+            "bus_delayed": bus_stats.get("delayed", 0),
+            "bus_reordered": bus_stats.get("reordered", 0),
+            "spam_hints_sent": m.get("spam_hints_sent", 0.0),
+            "spam_hints_accepted": m.get("spam_hints_accepted", 0.0),
+            "rogue_notices_ignored": m.get("rogue_notices_ignored", 0.0),
+            "rogue_self_crashes": m.get("rogue_self_crashes", 0.0),
+            "crash_replacements_requested": m.get(
+                "crash_replacements_requested", 0.0),
+            "replacements_placed": m.get("replacements_placed", 0.0),
+            "lost_work_s": m.get("lost_work_s", 0.0),
+            "lost_work_s_crash": m.get("lost_work_s_crash", 0.0),
+            "stateless_killed_without_ack": m.get(
+                "stateless_killed_without_ack", 0.0),
+            "alive_web": alive_by.get("web", 0),
+            "alive_train": alive_by.get("train", 0),
+            "trainer_steps": steps_total,
+            "trainer_emergency_ckpts": tm.get("emergency_checkpoints", 0.0),
+            "trainer_resizes": trainer.resizes,
+            "trainer_lost_steps": lost_steps,
+            "trainer_ckpt_every": trainer.ckpt_every,
+            "trainer_corrupt_skipped": len(skipped),
+            "metered_core_hours": bill["metered_core_hours"],
+            "cluster_core_hours": bill["cluster_core_hours"],
+            "billing_abs_diff": bill["abs_diff"],
+            "obs_reconcile_ok": recon["ok"],
+            "obs_notice_to_ack_p100_s": life["notice_to_ack_s"].get("p100"),
+        }
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

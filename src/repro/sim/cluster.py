@@ -119,6 +119,14 @@ class Cluster:
         # the workload-side agent runtime uses this to detach agents and
         # meter lost work, whatever path performed the kill
         self.kill_listeners: List = []
+        # -- unannounced hardware crashes ------------------------------------
+        # vm_id -> crash time, populated by crash_vm BEFORE the kill fires
+        # so kill listeners can distinguish a crash from an orchestrated
+        # kill; entries are pruned when the scheduler's repair loop drains
+        # the queue (membership survives until repair, not forever)
+        self.crashed_vms: Dict[str, float] = {}
+        self._crash_queue: List[tuple] = []     # (VM, crash_t) awaiting repair
+        self.crashes_total = 0
         self.add_region(Region("region-0", 1.0, 546.0))
         self.add_region(Region("region-green", 0.78, 267.0))
 
@@ -339,6 +347,44 @@ class Cluster:
         for sid in self.servers_in_region(region):
             displaced.extend(self.fail_server(sid))
         return displaced
+
+    # -- unannounced hardware crashes ----------------------------------------
+    def crash_vm(self, vm_id: str) -> bool:
+        """Hardware-crash an alive placed VM: no notice, no power event.
+        The crash is recorded *before* the kill so kill listeners (billing,
+        agent runtime) can see ``vm_id in cluster.crashed_vms``; the
+        scheduler's repair loop later drains the queue, closes the books,
+        and publishes the failure.  Returns False when the VM is already
+        dead or unplaced (a crash racing an eviction kill is a no-op)."""
+        vm = self.vms.get(vm_id)
+        if vm is None or not vm.alive or not vm.server:
+            return False
+        t = self.clock() if self.clock is not None else 0.0
+        self.crashed_vms[vm_id] = t
+        self._crash_queue.append((vm, t))
+        self.crashes_total += 1
+        self.kill_vm(vm_id)
+        return True
+
+    def crash_server(self, server_id: str) -> List[str]:
+        """Whole-host hardware failure: the server goes down and every VM
+        on it crashes (sorted order for determinism).  Returns the crashed
+        vm-ids."""
+        srv = self.servers.get(server_id)
+        if srv is None:
+            return []
+        srv.up = False
+        victims = sorted(self.vm_ids_on(server_id))
+        return [vid for vid in victims if self.crash_vm(vid)]
+
+    def drain_crashed(self) -> List[tuple]:
+        """Hand the un-repaired ``(VM, crash_t)`` queue to the repair loop
+        and prune the crash-membership map (listeners that needed it have
+        already run)."""
+        q, self._crash_queue = self._crash_queue, []
+        for vm, _ in q:
+            self.crashed_vms.pop(vm.vm_id, None)
+        return q
 
     # -- the cached view -----------------------------------------------------
     def _vm_entry(self, v: VM) -> Dict:

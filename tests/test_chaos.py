@@ -1,0 +1,431 @@
+"""Chaos layer tests (src/repro/chaos/): fault plans, the ChaosBus wrapper,
+unannounced-crash repair, heartbeat leases, checkpoint integrity, and the
+end-to-end property: under ANY random drop/duplicate/delay/reorder/crash
+schedule the eviction pipeline keeps its invariants — every ticket reaches
+a terminal outcome, nothing is double-released, no capacity leaks, and the
+cluster's incremental books still balance.  A deterministic seeded soak
+always runs; the hypothesis variant skips cleanly without hypothesis.
+"""
+import random
+
+import pytest
+
+from repro.agents import STATEFUL, STATELESS, AgentPolicy, AgentRuntime
+from repro.chaos import (ChannelFaults, ChaosBus, CrashInjector, FaultPlan,
+                         install_guest_modes, lossy_guest_plan)
+from repro.chaos import plan as CP
+from repro.core import hints as H
+from repro.core.bus import Bus
+from repro.core.global_manager import GlobalManager
+from repro.core.pricing import BillingMeter
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+from repro.sim.engine import Engine
+
+TERMINAL = {"killed", "early_released", "cancelled", "already_gone",
+            "crashed"}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_rejects_protected_topics():
+    for topic in (H.TOPIC_SCHED_DECISIONS, H.TOPIC_EVICTIONS,
+                  H.TOPIC_FAILURES):
+        with pytest.raises(ValueError):
+            FaultPlan(channels={topic: ChannelFaults(drop_p=0.1)})
+
+
+def test_fault_plan_rejects_unknown_guest_mode():
+    with pytest.raises(ValueError):
+        FaultPlan(guest_modes={"w": "eats_homework"})
+
+
+def test_lossy_guest_plan_never_touches_protected_topics():
+    plan = lossy_guest_plan(seed=3, drop_p=0.5, dup_p=0.5, delay_p=0.5,
+                            reorder_p=0.5)
+    assert not CP.PROTECTED_TOPICS & set(plan.channels)
+
+
+# ---------------------------------------------------------------------------
+# ChaosBus semantics
+# ---------------------------------------------------------------------------
+
+
+def _collect(bus, topic):
+    got = []
+    bus.subscribe(topic, lambda rec: got.append(rec.value))
+    return got
+
+
+def test_zero_plan_chaosbus_is_pass_through():
+    """An empty plan must make the wrapper behaviorally identical to the
+    inner bus (the acceptance bar for reusing committed benchmark runs)."""
+    plain, wrapped = Bus(), ChaosBus(Bus(), FaultPlan())
+    a, b = _collect(plain, "t"), _collect(wrapped, "t")
+    for i in range(50):
+        plain.publish("t", i, key=str(i % 3))
+        wrapped.publish("t", i, key=str(i % 3))
+    assert a == b == list(range(50))
+    assert all(v == 0 for v in wrapped.stats.values())
+
+
+def test_chaosbus_drop_all_loses_every_record():
+    bus = ChaosBus(Bus(), FaultPlan(
+        channels={"t": ChannelFaults(drop_p=1.0)}))
+    got = _collect(bus, "t")
+    for i in range(10):
+        bus.publish("t", i)
+    assert got == [] and bus.stats["dropped"] == 10
+
+
+def test_chaosbus_duplicate_all_delivers_twice():
+    bus = ChaosBus(Bus(), FaultPlan(
+        channels={"t": ChannelFaults(dup_p=1.0)}))
+    got = _collect(bus, "t")
+    for i in range(5):
+        bus.publish("t", i)
+    assert got == [0, 0, 1, 1, 2, 2, 3, 3, 4, 4]
+    assert bus.stats["duplicated"] == 5
+
+
+def test_chaosbus_delay_defers_until_engine_advances():
+    eng = Engine()
+    bus = ChaosBus(Bus(clock=eng.clock), FaultPlan(
+        channels={"t": ChannelFaults(delay_p=1.0, delay_max_s=3.0)}),
+        engine=eng)
+    got = _collect(bus, "t")
+    bus.publish("t", "x")
+    assert got == [] and bus.stats["delayed"] == 1
+    eng.run(until=3.0)
+    assert got == ["x"]
+
+
+def test_chaosbus_reorder_swaps_adjacent_records():
+    eng = Engine()
+    bus = ChaosBus(Bus(clock=eng.clock), FaultPlan(
+        channels={"t": ChannelFaults(reorder_p=1.0)}), engine=eng)
+    got = _collect(bus, "t")
+    bus.publish("t", "first")       # held back
+    bus.publish("t", "second")      # overtakes, flushes the held record
+    assert got == ["second", "first"]
+    assert bus.stats["reordered"] >= 1
+
+
+def test_chaosbus_reorder_safety_timer_flushes_lone_record():
+    eng = Engine()
+    bus = ChaosBus(Bus(clock=eng.clock), FaultPlan(
+        channels={"t": ChannelFaults(reorder_p=1.0, reorder_hold_s=2.0)}),
+        engine=eng)
+    got = _collect(bus, "t")
+    bus.publish("t", "only")
+    assert got == []
+    eng.run(until=2.5)              # no successor: the timer delivers it
+    assert got == ["only"]
+
+
+def test_delay_plan_without_engine_raises():
+    with pytest.raises(ValueError):
+        ChaosBus(Bus(), FaultPlan(
+            channels={"t": ChannelFaults(delay_p=0.5)}))
+
+
+# ---------------------------------------------------------------------------
+# unannounced crashes: repair loop closes every book
+# ---------------------------------------------------------------------------
+
+
+def _mini_fleet(seed=0, drop_p=0.0, dup_p=0.0, delay_p=0.0, reorder_p=0.0,
+                guest_modes=None, n_servers=6, notice_s=20.0):
+    eng = Engine()
+    plan = lossy_guest_plan(seed=seed, drop_p=drop_p, dup_p=dup_p,
+                            delay_p=delay_p, delay_max_s=3.0,
+                            reorder_p=reorder_p,
+                            guest_modes=guest_modes or {})
+    bus = ChaosBus(Bus(clock=eng.clock), plan, eng)
+    gm = GlobalManager(bus=bus, clock=eng.clock,
+                       hint_rate_per_s=1e6, hint_burst=1e6)
+    s = Scheduler(gm=gm, engine=eng, default_notice_s=notice_s)
+    for i in range(n_servers):
+        s.cluster.add_server(f"region-0/s{i}", 32.0, region="region-0")
+    policies = {}
+    rng = random.Random(seed)
+    for w, pol in (("web", AgentPolicy(statefulness=STATELESS,
+                                       scale_out_in=True)),
+                   ("batch", AgentPolicy(statefulness=STATEFUL,
+                                         state_gb=2.0, ckpt_gbps=0.5))):
+        s.gm.register_workload(w, {"scale_out_in": True,
+                                   "preemptibility_pct": 70.0})
+        policies[w] = pol
+    for mode_w in (guest_modes or {}):
+        s.gm.register_workload(mode_w, {"preemptibility_pct": 90.0})
+        policies[mode_w] = AgentPolicy(statefulness=STATEFUL, state_gb=1.0,
+                                       ckpt_gbps=0.5)
+    vm = 0
+    for w in policies:
+        for _ in range(6):
+            s.submit(VM(f"vm{vm}", w, "", 4,
+                        util_p95=rng.uniform(0.2, 0.8), spot=True))
+            vm += 1
+    s.schedule_pending()
+    install_guest_modes(plan, policies)
+    rt = AgentRuntime(s, policies=policies)
+    return s, rt, plan, eng
+
+
+def test_crash_repair_closes_books_and_publishes_failure():
+    s, rt, plan, eng = _mini_fleet()
+    meter = BillingMeter(s.gm, s.cluster)     # meters open on crash test VM?
+    # re-place one VM so the meter (attached late) observes its decision
+    records = []
+    s.gm.bus.subscribe(H.TOPIC_FAILURES, lambda r: records.append(r.value))
+    victim = next(v for v in s.cluster.vms.values() if v.alive and v.server)
+    eng.run(until=10.0)
+    assert s.cluster.crash_vm(victim.vm_id)
+    eng.run(until=10.5)           # crash queued, not yet detected
+    assert not records
+    s.tick()                      # repair loop drains the crash queue
+    assert [r["vm"] for r in records] == [victim.vm_id]
+    assert records[0]["crash_t"] == pytest.approx(10.0)
+    assert s.stats["crashed_vms"] == 1
+    assert not victim.alive and victim.server == ""
+    s.cluster.assert_consistent()
+    # double delivery of the same crash is impossible: queue was drained
+    s.tick()
+    assert len(records) == 1
+
+
+def test_crash_mid_eviction_resolves_ticket_as_crashed_not_violation():
+    s, rt, plan, eng = _mini_fleet()
+    # stateful guest: its ack waits on a 4 s checkpoint, so a crash at
+    # t=2 lands while the ticket is still open
+    victim = next(v for v in s.cluster.vms.values()
+                  if v.alive and v.server and v.workload == "batch")
+    from repro.core.optimizations.policies import Action
+    [t] = s.evictor.submit(
+        [Action("evict", vm=victim.vm_id, workload=victim.workload,
+                payload={"after_s": 20.0})], source="test")
+    eng.run(until=2.0)
+    assert s.cluster.crash_vm(victim.vm_id)
+    s.tick()
+    assert t.outcome == "crashed" and not t.killed
+    assert s.evictor.violations() == []
+    s.cluster.assert_consistent()
+
+
+def test_billing_meter_closes_at_crash_instant():
+    eng = Engine()
+    s = Scheduler(engine=eng)
+    meter = BillingMeter(s.gm, s.cluster)
+    s.cluster.add_server("region-0/s0", 32.0, region="region-0")
+    s.gm.register_workload("w", {})
+    s.submit(VM("a", "w", "", 8))
+    s.schedule_pending()
+    eng.run(until=100.0)
+    assert s.cluster.crash_vm("a")
+    eng.run(until=400.0)          # long dead tail: no phantom metering
+    s.tick()
+    rec = meter.reconcile(400.0)
+    assert rec["abs_diff"] < 1e-9
+    assert rec["metered_core_hours"] == pytest.approx(8 * 100.0 / 3600.0)
+
+
+def test_silent_guest_lease_expires_and_ladder_kill_stands():
+    s, rt, plan, eng = _mini_fleet(guest_modes={"rogue": "never_ack"},
+                                   notice_s=15.0)
+    rt.enable_leases(lease_s=10.0, until=200.0, check_period_s=2.0)
+    rogue_vm = next(v for v in s.cluster.vms.values()
+                    if v.workload == "rogue" and v.alive)
+    from repro.core.optimizations.policies import Action
+    [t] = s.evictor.submit(
+        [Action("evict", vm=rogue_vm.vm_id, workload="rogue",
+                payload={"after_s": 15.0})], source="test")
+    s.start(2.0, 60.0)
+    s.run_until(60.0)
+    assert s.evictor.stats.get("silent_guests", 0) >= 1
+    assert t.outcome == "killed" and not rogue_vm.alive
+    # killed exactly at the deadline => full notice honored, no violation
+    assert s.evictor.violations() == []
+
+
+# ---------------------------------------------------------------------------
+# the chaos property: any schedule, every invariant
+# ---------------------------------------------------------------------------
+
+
+def _chaos_episode(seed: int, drop_p: float, dup_p: float, delay_p: float,
+                   reorder_p: float, n_crashes: int, horizon: float = 300.0):
+    s, rt, plan, eng = _mini_fleet(seed=seed, drop_p=drop_p, dup_p=dup_p,
+                                   delay_p=delay_p, reorder_p=reorder_p)
+    rng = random.Random(seed ^ 0x5EED)
+    rt.enable_leases(lease_s=30.0, until=horizon, check_period_s=5.0)
+    for w in range(3):
+        eng.at(20.0 + 60.0 * w,
+               lambda: s.capacity_crunch("region-0", 40.0))
+    crasher = CrashInjector(s.cluster, eng, plan)
+    for i in range(n_crashes):
+        eng.at(rng.uniform(10.0, horizon - 60.0),
+               lambda: crasher.crash_vm(rng.choice(
+                   sorted(s.cluster.vms))) if s.cluster.vms else None)
+    s.start(5.0, horizon)
+    s.run_until(horizon)
+
+    # every ticket terminal — nothing stuck mid-ladder after the horizon
+    open_tickets = [t for t in s.evictor.log
+                    if t.outcome not in TERMINAL] + \
+        list(s.evictor.tickets.values())
+    assert not open_tickets, [vars(t) for t in open_tickets]
+    # no violation among delivered notices
+    assert s.evictor.violations() == []
+    # no double release / capacity leak: the incremental books balance
+    s.cluster.assert_consistent()
+    # every crash the cluster recorded was repaired and published
+    assert s.stats.get("crashed_vms", 0) == s.cluster.crashes_total
+    # a dead VM never occupies a server
+    for v in s.cluster.vms.values():
+        if not v.alive:
+            assert v.server == ""
+
+
+def test_chaos_schedule_property_soak():
+    """Deterministic always-run form of the property: random fault rates
+    and crash schedules, seeded per episode."""
+    for seed in range(6):
+        rng = random.Random(seed)
+        _chaos_episode(seed,
+                       drop_p=rng.uniform(0.0, 0.4),
+                       dup_p=rng.uniform(0.0, 0.3),
+                       delay_p=rng.uniform(0.0, 0.3),
+                       reorder_p=rng.uniform(0.0, 0.2),
+                       n_crashes=rng.randrange(0, 5))
+
+
+def test_chaos_schedule_property_hypothesis():
+    """Hypothesis variant (skips cleanly without hypothesis installed)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(min_value=0, max_value=2**16 - 1),
+               drop_p=st.floats(min_value=0.0, max_value=0.5),
+               dup_p=st.floats(min_value=0.0, max_value=0.5),
+               delay_p=st.floats(min_value=0.0, max_value=0.3),
+               reorder_p=st.floats(min_value=0.0, max_value=0.3),
+               n_crashes=st.integers(min_value=0, max_value=6))
+    @hyp.settings(max_examples=15, deadline=None)
+    def run(seed, drop_p, dup_p, delay_p, reorder_p, n_crashes):
+        _chaos_episode(seed, drop_p, dup_p, delay_p, reorder_p, n_crashes,
+                       horizon=200.0)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# store durability: crash anywhere across the snapshot path (always-run
+# deterministic form; the hypothesis properties live in test_wi_store.py)
+# ---------------------------------------------------------------------------
+
+
+def test_store_snapshot_crash_at_every_wal_byte_recovers_a_prefix(tmp_path):
+    from pathlib import Path
+
+    from repro.core.store import Store
+    ops = [("put", "a", 1), ("put", "b", 2), ("del", "a", 0),
+           ("put", "c", 3), ("put", "b", 4), ("put", "d", 5),
+           ("del", "b", 0), ("put", "a", 6)]
+    states = [{}]
+    for op, k, v in ops:
+        st = dict(states[-1])
+        st[k] = v
+        if op == "del":
+            st.pop(k, None)
+        states.append(st)
+    src = tmp_path / "src"
+    with Store(root=str(src), snapshot_every=3) as store:
+        for op, k, v in ops:
+            if op == "put":
+                store.put(k, v)
+            else:
+                store.delete(k)
+    wal = (src / "wal.log").read_bytes()
+    snap = (src / "snapshot.json").read_bytes()
+    for cut in range(len(wal) + 1):
+        d = tmp_path / f"crash{cut}"
+        d.mkdir()
+        (d / "snapshot.json").write_bytes(snap)
+        (d / "wal.log").write_bytes(wal[:cut])
+        (d / "snapshot.json.tmp").write_bytes(b'{"torn')
+        with Store(root=str(d), snapshot_every=10_000) as rec:
+            got = {k: rec.get(k) for k in "abcd"
+                   if rec.get(k) is not None}
+        assert got in states, (got, cut)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity (crc32 + corrupt fallback)
+# ---------------------------------------------------------------------------
+
+
+def _ckpt(tmp_path, keep=5):
+    ckpt_mod = pytest.importorskip("repro.ckpt.checkpoint")
+    return ckpt_mod, ckpt_mod.Checkpointer(str(tmp_path), keep=keep)
+
+
+def test_checkpoint_crc_detects_corrupt_leaf(tmp_path):
+    import numpy as np
+    ckpt_mod, ck = _ckpt(tmp_path)
+    like = {"w": np.zeros(16)}
+    ck.save(1, {"w": np.ones(16)})
+    ck.save(2, {"w": np.full(16, 2.0)})
+    assert ck.verify(2)
+    leaf = next((ck.root / "step_2").glob("*.npy"))
+    leaf.write_bytes(b"torn write")
+    assert not ck.verify(2)
+    assert ck.verify(1)
+    assert ck.latest_good_step() == 1
+    with pytest.raises(ckpt_mod.CheckpointCorruptError):
+        ck.restore(2, like)
+    restored = ck.restore(1, like)
+    assert float(restored["w"][0]) == 1.0
+
+
+def test_checkpoint_bitflip_detected_not_just_torn_file(tmp_path):
+    import numpy as np
+    ckpt_mod, ck = _ckpt(tmp_path)
+    ck.save(1, {"w": np.arange(8.0)})
+    leaf = next((ck.root / "step_1").glob("*.npy"))
+    arr = np.load(leaf)
+    arr[3] += 1.0                       # silent bit-level corruption
+    np.save(leaf, arr)
+    assert not ck.verify(1)
+    with pytest.raises(ckpt_mod.CheckpointCorruptError):
+        ck.restore(1, {"w": np.zeros(8)})
+
+
+def test_checkpoint_legacy_manifest_without_crc_still_verifies(tmp_path):
+    import json
+
+    import numpy as np
+    _, ck = _ckpt(tmp_path)
+    ck.save(1, {"w": np.ones(4)})
+    mf = ck.root / "step_1" / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    del manifest["crc32"]
+    mf.write_text(json.dumps(manifest))
+    assert ck.verify(1)                 # nothing to check against
+    ck.restore(1, {"w": np.zeros(4)})   # and restore keeps working
+
+
+def test_sim_trainer_recovers_past_corrupt_checkpoint(tmp_path):
+    chaos_soak = pytest.importorskip("repro.sim.casestudies.chaos_soak")
+    tr = chaos_soak.SimCkptTrainer(str(tmp_path), ckpt_every=10)
+    for _ in range(25):
+        tr.step_once()                  # checkpoints at 10 and 20
+    corrupted = tr.corrupt_newest()
+    assert corrupted == 20
+    fresh = chaos_soak.SimCkptTrainer(str(tmp_path), ckpt_every=10)
+    assert fresh.step == 10             # fell back past the corrupt one
+    assert any(e["kind"] == "corrupt_checkpoint_skipped"
+               for e in fresh.events_log)
+    assert tr.step - fresh.step <= 10 + 5   # bounded by interval + tail

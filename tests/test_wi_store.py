@@ -62,6 +62,77 @@ def test_wal_crash_at_any_byte_prefix_recovers_a_prefix(ops, data):
         assert got in _apply(ops), (got, ops, cut)
 
 
+@settings(max_examples=30, deadline=None)
+@given(ops=_ops, snap_every=st.integers(min_value=1, max_value=6),
+       data=st.data())
+def test_crash_at_any_wal_prefix_with_snapshots_recovers_a_prefix(
+        ops, snap_every, data):
+    """Same prefix contract, but with the snapshot path engaged: a small
+    ``snapshot_every`` forces snapshot.json rewrites + WAL truncations
+    mid-sequence, and the crash leaves torn ``snapshot.json.tmp`` debris
+    behind.  Recovery = snapshot + replayed WAL prefix must still be a
+    prefix of the committed writes — never a reordering, never a hole."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        with Store(root=d1, snapshot_every=snap_every) as store:
+            for op, k, v in ops:
+                if op == "put":
+                    store.put(k, v)
+                else:
+                    store.delete(k)
+        snap = Path(d1) / "snapshot.json"
+        if snap.exists():
+            (Path(d2) / "snapshot.json").write_bytes(snap.read_bytes())
+        wal = (Path(d1) / "wal.log").read_bytes()
+        cut = data.draw(st.integers(min_value=0, max_value=len(wal)),
+                        label="crash_byte")
+        (Path(d2) / "wal.log").write_bytes(wal[:cut])
+        # a crash mid-_snapshot leaves the staged tmp file behind; it must
+        # be ignored by recovery (only the atomic rename publishes it)
+        (Path(d2) / "snapshot.json.tmp").write_bytes(b'{"seq": 9999, "kv"')
+        with Store(root=d2, snapshot_every=10_000) as recovered:
+            got = {k: recovered.get(k) for k in KEYS
+                   if recovered.get(k) is not None}
+        assert got in _apply(ops), (got, ops, cut, snap_every)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=_ops, snap_every=st.integers(min_value=1, max_value=6))
+def test_crash_between_snapshot_publish_and_wal_truncate_loses_nothing(
+        ops, snap_every):
+    """The other half of the snapshot durability ordering: if the crash
+    lands AFTER the snapshot rename but BEFORE the WAL truncate, recovery
+    sees the new snapshot plus a stale WAL holding records the snapshot
+    already contains.  Seq-gated replay must skip them and land exactly on
+    the final committed state."""
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2, \
+            tempfile.TemporaryDirectory() as d3:
+        # d1: snapshotting store -> provides the published snapshot.json
+        with Store(root=d1, snapshot_every=snap_every) as store:
+            for op, k, v in ops:
+                if op == "put":
+                    store.put(k, v)
+                else:
+                    store.delete(k)
+        # d3: same ops, snapshots disabled -> provides the full stale WAL
+        with Store(root=d3, snapshot_every=10_000) as shadow:
+            for op, k, v in ops:
+                if op == "put":
+                    shadow.put(k, v)
+                else:
+                    shadow.delete(k)
+        snap = Path(d1) / "snapshot.json"
+        if snap.exists():
+            (Path(d2) / "snapshot.json").write_bytes(snap.read_bytes())
+        (Path(d2) / "wal.log").write_bytes(
+            (Path(d3) / "wal.log").read_bytes())
+        with Store(root=d2, snapshot_every=10_000) as recovered:
+            got = {k: recovered.get(k) for k in KEYS
+                   if recovered.get(k) is not None}
+        assert got == _apply(ops)[-1], (got, ops, snap_every)
+
+
 def test_store_close_releases_wal_handle():
     with tempfile.TemporaryDirectory() as d:
         s = Store(root=d)
