@@ -540,6 +540,72 @@ def chaos_soak():
                 f"violations={r['violations']}")
 
 
+def serving_fleet():
+    """Serving-as-tenant scenario: synthetic-mode ServingEngine replicas
+    under the live scheduler and wrk2-style open-loop diurnal traffic
+    (sim/casestudies/serving_fleet.py).  Pure python — runs in-process;
+    sizes honor SERVING_FLEET_SERVERS / SERVING_FLEET_DAY_S /
+    SERVING_FLEET_PEAK_RPS."""
+    from repro.sim.casestudies.serving_fleet import (DAY_S, N_SERVERS,
+                                                     PEAK_RPS, run)
+    us, r = _timed(lambda: run(
+        seed=0,
+        n_servers=int(os.environ.get("SERVING_FLEET_SERVERS", N_SERVERS)),
+        day_s=float(os.environ.get("SERVING_FLEET_DAY_S", DAY_S)),
+        peak_rps=float(os.environ.get("SERVING_FLEET_PEAK_RPS",
+                                      PEAK_RPS))))
+    # the headline bars, re-asserted here so the benchmark log shows them
+    assert r["waves"] >= 2, r
+    assert r["violations"] == 0, f"{r['violations']} notice violations"
+    assert r["serving_early_releases"] >= 1, \
+        "no serving eviction resolved by a drain ack"
+    assert r["requests_lost"] == 0, \
+        f"{r['requests_lost']} requests died with a drained replica"
+    assert r["goodput_frac"] >= 0.95, r["goodput_frac"]
+    assert r["e2e_p99_s"] <= r["p99_bound_s"], \
+        f"e2e p99 {r['e2e_p99_s']:.2f}s blew the {r['p99_bound_s']}s bound"
+    assert r["restores"] >= 1 and r["throttle_notices"] >= 1, \
+        "throttle -> slot-halve -> restore round trip incomplete"
+    assert r["scale_outs"] >= 1, "pressure hint never drove a scale-out"
+    assert r["obs_reconcile_ok"]
+    JSON_METRICS["serving_fleet"] = {
+        "waves": r["waves"], "violations": r["violations"],
+        "serving_early_releases": r["serving_early_releases"],
+        "serving_ladder_kills": r["serving_ladder_kills"],
+        "fleet_early_releases": r["fleet_early_releases"],
+        "offered": r["offered"], "completed": r["completed"],
+        "goodput_frac": round(r["goodput_frac"], 4),
+        "goodput_rps": round(r["goodput_rps"], 3),
+        "e2e_p50_s": round(r["e2e_p50_s"], 3),
+        "e2e_p99_s": round(r["e2e_p99_s"], 3),
+        "ttft_p99_s": round(r["ttft_p99_s"], 3),
+        "token_p50_s": round(r["token_p50_s"], 4),
+        "token_p99_s": round(r["token_p99_s"], 4),
+        "p99_bound_s": r["p99_bound_s"],
+        "requests_lost": r["requests_lost"],
+        "requests_rerouted": r["requests_rerouted"],
+        "drains": r["drains"],
+        "throttle_notices": r["throttle_notices"],
+        "restores": r["restores"],
+        "harvest_slots_granted": r["harvest_slots_granted"],
+        "ack_margin_min_s": round(r["ack_margin_min_s"], 2),
+        "scale_outs": r["scale_outs"],
+        "pressure_signals": r["pressure_signals"],
+        "replicas_adopted": r["replicas_adopted"],
+        "replicas_final": r["replicas_final"],
+        "obs_reconcile_ok": r["obs_reconcile_ok"],
+        "obs_max_notice_s": r["obs_max_notice_s"],
+        "obs_notice_to_ack_p100_s": r["obs_notice_to_ack_p100_s"],
+        "obs_acks_observed": r["obs_acks_observed"],
+    }
+    return us, (f"p50={r['e2e_p50_s']:.2f}s,p99={r['e2e_p99_s']:.2f}s,"
+                f"goodput={r['goodput_frac']:.3f},"
+                f"early={r['serving_early_releases']},"
+                f"lost={r['requests_lost']:.0f},"
+                f"scale_outs={r['scale_outs']},"
+                f"violations={r['violations']}")
+
+
 def sched_scenarios():
     """Eviction-storm + capacity-crunch scenarios (sched/ subsystem)."""
     from repro.sim.casestudies.capacity_crunch import run as run_crunch
@@ -561,7 +627,9 @@ _SIZE_KNOBS = ("SCHED_SCALE_SERVERS", "SCHED_SCALE_VMS",
                "AI_TRAINING_STEPS", "AI_TRAINING_SERVERS",
                "CHAOS_SERVERS", "CHAOS_VM_SCALE",
                "CHAOS_DROP_P", "CHAOS_DUP_P", "CHAOS_DELAY_P",
-               "CHAOS_REORDER_P", "CHAOS_CRASH_RATE")
+               "CHAOS_REORDER_P", "CHAOS_CRASH_RATE",
+               "SERVING_FLEET_SERVERS", "SERVING_FLEET_DAY_S",
+               "SERVING_FLEET_PEAK_RPS")
 
 
 def _run_meta() -> dict:
@@ -593,8 +661,8 @@ def _run_meta() -> dict:
 ALL = [t1_survey, t2_pricing, t3_applicability, t4_conflicts, f4_bigdata,
        s62_microservices, s63_videoconf, f5_savings, e2e_savings,
        sched_scale, sched_scale_xl, sched_scenarios, agents_diurnal,
-       ai_training, chaos_soak, wi_hint_throughput, kernel_flash,
-       roofline_table]
+       ai_training, chaos_soak, serving_fleet, wi_hint_throughput,
+       kernel_flash, roofline_table]
 
 # sched_scale_xl is opt-in on full runs (it needs ~100k simulated VMs);
 # request it explicitly via --only

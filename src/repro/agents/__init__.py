@@ -10,9 +10,11 @@ from repro.agents.agent import WorkloadAgent
 from repro.agents.policy import (PARTIAL, STATEFUL, STATELESS, AgentPolicy,
                                  DiurnalProfile)
 from repro.agents.runtime import AgentRuntime
+from repro.agents.serving_agent import ServingAgent, ServingTenant
 from repro.agents.trainer_agent import TrainerAgent, TrainerTenant
 
 __all__ = [
     "AgentPolicy", "AgentRuntime", "DiurnalProfile", "PARTIAL", "STATEFUL",
-    "STATELESS", "TrainerAgent", "TrainerTenant", "WorkloadAgent",
+    "STATELESS", "ServingAgent", "ServingTenant", "TrainerAgent",
+    "TrainerTenant", "WorkloadAgent",
 ]

@@ -1,0 +1,395 @@
+"""The batched serving engine as a real scheduler tenant (paper §4).
+
+``serve.engine.ServingEngine`` has always *claimed* to be a WI workload;
+this module closes the loop the way ``trainer_agent`` did for training:
+one ``ServingAgent`` per placed VM = one serving replica, and a shared
+``ServingTenant`` that owns replica membership plus the request router.
+Serving is the latency-critical class the paper says must keep its
+availability/latency hints honored while the platform reclaims around it —
+so every elastic reaction here preserves in-flight decodes:
+
+  * ``EVICTION_NOTICE`` — stop admitting to the noticed replica, hand its
+    queued-but-unstarted requests back to the router, and schedule the ack
+    after the modeled drain latency (worst-case remaining decode steps x
+    ``token_time_s``).  If the drain beats the ``kill_t`` deadline the ack
+    lands on ``wi.events.acks`` and the VM is early-released; otherwise the
+    ladder kill wins and the requests still in flight are metered as lost
+    (bounded by the replica's batch slots).
+  * ``SCALE_UP_OFFER`` (harvest) — granted ``extra_cores`` convert to extra
+    decode slots (``cores_per_slot`` = nominal cores / nominal slots).
+  * ``SCALE_DOWN_NOTICE`` — granted slots are revoked and the shrink acked.
+  * ``THROTTLE_NOTICE`` / ``UNDERCLOCK_NOTICE`` — the fleet halves its
+    decode slots: *compute* shed, not p95 demand shed (the PR 5 lesson —
+    demand shed would disqualify the ``OVERCLOCK_OFFER`` that restores).
+  * autoscaling — the leader publishes an ``x-autoscale-pressure`` runtime
+    hint driven by queue depth AND p99 token latency (not utilization
+    alone); ``AutoScalingPolicy`` consumes it to clone replicas out or
+    drain them back in through the eviction pipeline.
+
+The tenant is engine-agnostic: anything exposing ``submit`` / ``drain`` /
+``resize_slots`` / ``queue_depth`` / ``active_count`` / ``step_once``
+works, so the choreography is unit-testable without jax; real replicas are
+built by the ``engine_factory`` (the ``serving_fleet`` case study attaches
+synthetic-mode ``ServingEngine``s running on the sim clock).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import hints as H
+
+from repro.agents.agent import WorkloadAgent
+from repro.agents.policy import STATEFUL, AgentPolicy
+
+_EVICTION = H.PlatformEvent.EVICTION_NOTICE.value
+_THROTTLES = (H.PlatformEvent.THROTTLE_NOTICE.value,
+              H.PlatformEvent.UNDERCLOCK_NOTICE.value)
+_RESTORE = H.PlatformEvent.OVERCLOCK_OFFER.value
+_SCALE_UP = H.PlatformEvent.SCALE_UP_OFFER.value
+_SCALE_DOWN = H.PlatformEvent.SCALE_DOWN_NOTICE.value
+
+
+class ServingAgent(WorkloadAgent):
+    """Per-VM agent for one replica of a live serving deployment."""
+
+    def __init__(self, vm, endpoint, runtime, policy: AgentPolicy,
+                 tenant: "ServingTenant"):
+        super().__init__(vm, endpoint, runtime, policy)
+        self.tenant = tenant
+        tenant.adopt(self)
+
+    def _on_event(self, event: Dict[str, Any]):
+        if self.dead:
+            return
+        kind = event.get("event")
+        if kind == _EVICTION:
+            self._on_eviction(event)
+        elif kind in _THROTTLES:
+            self.tenant.on_throttle(self, event)
+        elif kind == _RESTORE:
+            self.tenant.on_restore(self, event)
+        elif kind == _SCALE_UP:
+            self.tenant.on_scale_up(self, event)
+        elif kind == _SCALE_DOWN:
+            self.tenant.on_scale_down(self, event)
+
+    def _begin_checkpoint(self, event: Dict[str, Any]) -> float:
+        """For serving, "checkpoint" = drain: admission stops NOW (queued
+        requests re-route immediately), and the base class schedules the
+        ack after the modeled drain latency returned here — worst-case
+        remaining decode steps of the in-flight batch."""
+        drain_s = self.tenant.begin_drain(self)
+        now = self.rt.now()
+        kill_t = float(event.get("payload", {}).get(
+            "kill_t", now + float(event.get("deadline_s", 0.0))))
+        self.tenant.note_ack_margin(kill_t - (now + drain_s))
+        return drain_s
+
+    def on_killed(self, t: float) -> float:
+        self.dead = True
+        lost = max(0.0, t - self.last_ckpt_t)
+        self.tenant.on_vm_killed(self, lost)
+        return lost
+
+
+class ServingTenant:
+    """Shared state for one serving workload's agents: replica membership,
+    the request router, and the fleet-wide elastic reactions."""
+
+    def __init__(self, workload: str,
+                 engine_factory: Callable[[str, int], Any],
+                 slots_per_vm: int = 4, token_time_s: float = 0.25,
+                 p99_target_s: float = 5.0):
+        self.workload = workload
+        self.engine_factory = engine_factory
+        self.slots_per_vm = max(1, int(slots_per_vm))
+        # modeled sim seconds per decode step: the drain-latency unit (the
+        # pump loop that steps real engines should use the same cadence so
+        # the modeled ack matches what the engines actually do)
+        self.token_time_s = float(token_time_s)
+        self.p99_target_s = float(p99_target_s)
+        self.runtime = None
+        self.agents: Dict[str, ServingAgent] = {}
+        self.replicas: Dict[str, Any] = {}      # vm_id -> engine
+        self._order: List[str] = []             # adopt order: stable routing
+        self._draining: set = set()
+        self._granted_cores: Dict[str, float] = {}
+        self._extra_slots: Dict[str, int] = {}
+        self._throttled = False
+        # requests with nowhere to go (total reclaim): replayed into the
+        # first replica that can take them
+        self._overflow: deque = deque()
+        self.completion_sinks: List[Callable[[Any], None]] = []
+        self.metrics = defaultdict(float)
+
+    # -- wiring --------------------------------------------------------------
+    def policy(self, **kw) -> AgentPolicy:
+        """An ``AgentPolicy`` that constructs this tenant's agents."""
+        kw.setdefault("statefulness", STATEFUL)
+        kw.setdefault("scale_out_in", True)
+        return AgentPolicy(agent_factory=lambda vm, ep, rt, pol:
+                           ServingAgent(vm, ep, rt, pol, self), **kw)
+
+    def adopt(self, agent: ServingAgent):
+        if self.runtime is None:
+            self.runtime = agent.rt
+        vm_id = agent.vm.vm_id
+        if vm_id in self.agents:                # re-adopt: keep the engine
+            self.agents[vm_id] = agent
+            return
+        self.agents[vm_id] = agent
+        self._order.append(vm_id)
+        self._granted_cores[vm_id] = 0.0
+        self._extra_slots[vm_id] = 0
+        self.replicas[vm_id] = self.engine_factory(
+            vm_id, self._slot_target(vm_id))
+        self.metrics["replicas_adopted"] += 1
+        self._drain_overflow()      # parked requests board the new replica
+
+    # -- router --------------------------------------------------------------
+    def _load(self, vm_id: str) -> int:
+        e = self.replicas[vm_id]
+        return e.queue_depth() + e.active_count()
+
+    def _admitting_order(self) -> List[str]:
+        """Live replicas by (load, adopt order) — deterministic min-load."""
+        cands = [(self._load(vid), i, vid)
+                 for i, vid in enumerate(self._order)
+                 if vid not in self._draining]
+        return [vid for _, _, vid in sorted(cands)]
+
+    def submit(self, req) -> Optional[str]:
+        """Route a request to the least-loaded admitting replica; with none
+        (total reclaim) it parks in the overflow queue until a replacement
+        replica lands."""
+        for vid in self._admitting_order():
+            if self.replicas[vid].submit(req):
+                self.metrics["requests_routed"] += 1
+                return vid
+        self._overflow.append(req)
+        self.metrics["requests_overflowed"] += 1
+        return None
+
+    def _drain_overflow(self):
+        while self._overflow:
+            req = self._overflow[0]
+            placed = None
+            for vid in self._admitting_order():
+                if self.replicas[vid].submit(req):
+                    placed = vid
+                    break
+            if placed is None:
+                return
+            self._overflow.popleft()
+            self.metrics["overflow_replayed"] += 1
+
+    def _request_done(self, req):
+        """Engine completion hook (wired by the engine factory): count
+        goodput and fan out to registered sinks (the traffic generator's
+        latency recorder)."""
+        self.metrics["requests_completed"] += 1
+        for sink in self.completion_sinks:
+            sink(req)
+
+    # -- event reactions (called by ServingAgent) ----------------------------
+    def begin_drain(self, agent: ServingAgent) -> float:
+        """Eviction notice: the replica stops admitting immediately, its
+        queued requests re-route, and the modeled drain latency (worst-case
+        in-flight decode steps x token_time_s) is returned for the ack
+        timer."""
+        vm_id = agent.vm.vm_id
+        eng = self.replicas.get(vm_id)
+        if eng is None:
+            return 0.0
+        self._draining.add(vm_id)
+        steps, requeued = eng.drain()
+        self.metrics["drains"] += 1
+        self.metrics["requests_rerouted"] += len(requeued)
+        for r in requeued:
+            self.submit(r)
+        return steps * self.token_time_s
+
+    def on_vm_killed(self, agent: ServingAgent, lost_s: float):
+        vm_id = agent.vm.vm_id
+        self.agents.pop(vm_id, None)
+        if vm_id in self._order:
+            self._order.remove(vm_id)
+        self._draining.discard(vm_id)
+        self._granted_cores.pop(vm_id, None)
+        self._extra_slots.pop(vm_id, None)
+        eng = self.replicas.pop(vm_id, None)
+        if eng is not None:
+            # a drained replica finished its batch before the ack; only a
+            # ladder kill (or crash) takes in-flight/queued requests with it
+            lost = eng.active_count() + eng.queue_depth()
+            self.metrics["requests_lost"] += lost
+        self.metrics["replicas_killed"] += 1
+        self.metrics["lost_work_s"] += lost_s
+
+    def _cores_per_slot(self, vm) -> float:
+        return max(vm.cores / self.slots_per_vm, 1e-9)
+
+    def _slot_target(self, vm_id: str) -> int:
+        want = self.slots_per_vm + self._extra_slots.get(vm_id, 0)
+        if self._throttled:
+            want = max(1, want // 2)
+        return want
+
+    def _apply_slots(self, vm_id: str):
+        eng = self.replicas.get(vm_id)
+        if eng is not None:
+            eng.resize_slots(self._slot_target(vm_id))
+
+    def on_scale_up(self, agent: ServingAgent, event: Dict[str, Any]):
+        """Harvest granted spare cores to this VM: whole-slot grants grow
+        the replica's decode batch."""
+        vm_id = agent.vm.vm_id
+        extra = float(event.get("payload", {}).get("extra_cores", 0.0))
+        if extra <= 0 or vm_id not in self._granted_cores:
+            return
+        self._granted_cores[vm_id] += extra
+        want = int(self._granted_cores[vm_id]
+                   // self._cores_per_slot(agent.vm))
+        if want > self._extra_slots[vm_id]:
+            self.metrics["harvest_slots_granted"] += \
+                want - self._extra_slots[vm_id]
+            self._extra_slots[vm_id] = want
+            self._apply_slots(vm_id)
+
+    def on_scale_down(self, agent: ServingAgent, event: Dict[str, Any]):
+        """Harvest revoked cores: shrink the decode batch back and ack
+        (the engine defers the shrink until in-flight sequences fit)."""
+        vm_id = agent.vm.vm_id
+        taken = float(event.get("payload", {}).get("cores", 0.0))
+        if vm_id not in self._granted_cores:
+            return
+        self._granted_cores[vm_id] = max(
+            0.0, self._granted_cores[vm_id] - taken)
+        want = int(self._granted_cores[vm_id]
+                   // self._cores_per_slot(agent.vm))
+        if want < self._extra_slots[vm_id]:
+            self.metrics["harvest_slots_revoked"] += \
+                self._extra_slots[vm_id] - want
+            self._extra_slots[vm_id] = want
+            self._apply_slots(vm_id)
+        seq = event.get("seq")
+        if seq is not None:
+            agent.ep.ack_event(seq)
+
+    def on_throttle(self, agent: ServingAgent, event: Dict[str, Any]):
+        """Oversubscription / power throttle: the whole fleet halves its
+        decode slots — compute shed, not p95 demand shed."""
+        self.metrics["throttle_notices"] += 1
+        if not self._throttled:
+            self._throttled = True
+            self.metrics["throttled"] = 1.0
+            for vid in self._order:
+                self._apply_slots(vid)
+        seq = event.get("seq")
+        if seq is not None:
+            agent.ep.ack_event(seq)
+
+    def on_restore(self, agent: ServingAgent, event: Dict[str, Any]):
+        if self._throttled:
+            self._throttled = False
+            self.metrics["throttled"] = 0.0
+            self.metrics["restores"] += 1
+            for vid in self._order:
+                self._apply_slots(vid)
+
+    def note_ack_margin(self, margin_s: float):
+        """How much sim time the scheduled ack beats the kill deadline by
+        (negative: the ladder will win and in-flight requests are lost)."""
+        if ("ack_margin_min_s" not in self.metrics
+                or margin_s < self.metrics["ack_margin_min_s"]):
+            self.metrics["ack_margin_min_s"] = margin_s
+
+    # -- autoscaling signal --------------------------------------------------
+    def queue_depth(self) -> int:
+        return sum(self.replicas[vid].queue_depth()
+                   for vid in self._order) + len(self._overflow)
+
+    def p99_token_latency_s(self) -> float:
+        vals = []
+        for vid in self._order:
+            fn = getattr(self.replicas[vid], "p99_token_latency", None)
+            if fn is not None:
+                v = fn()
+                if v == v:              # NaN-safe
+                    vals.append(v)
+        return max(vals) if vals else float("nan")
+
+    def autoscale_pressure(self) -> float:
+        """A util_p95-shaped scale signal in [0, 1] driven by queue depth
+        and p99 token latency instead of utilization alone.  Calibrated so
+        a full batch with an empty queue and healthy latency sits at 0.5
+        (the policy's hold band); a growing queue or a p99 past target
+        crosses the 0.6 scale-out trigger; a mostly idle fleet falls under
+        the 0.25 scale-in trigger.  With zero live replicas (total
+        reclaim) any parked request pins the signal to 1."""
+        slots = sum(self.replicas[vid].slots for vid in self._order
+                    if vid not in self._draining)
+        active = sum(self.replicas[vid].active_count()
+                     for vid in self._order if vid not in self._draining)
+        queued = self.queue_depth()
+        if slots == 0:
+            return 1.0 if queued else 0.0
+        occupancy = (active + queued) / slots
+        p99 = self.p99_token_latency_s()
+        lat_ratio = p99 / self.p99_target_s if p99 == p99 else 0.0
+        return min(1.0, 0.5 * max(occupancy, lat_ratio))
+
+    def publish_autoscale_hint(self) -> bool:
+        """The leader agent asserts the workload-wide autoscale signal
+        through its guest channel (KVP write -> local manager -> runtime
+        hint on the bus -> ``AutoScalingPolicy``)."""
+        if self.runtime is None:
+            return False
+        lead = next((a for a in self.agents.values()
+                     if self.runtime.is_leader(a)), None)
+        if lead is None:
+            lead = next(iter(self.agents.values()), None)
+        if lead is None or lead.dead:
+            return False
+        pressure = self.autoscale_pressure()
+        self.metrics["autoscale_pressure"] = pressure
+        p99 = self.p99_token_latency_s()
+        ok = lead.ep.set_runtime_hints({
+            "x-autoscale-pressure": round(pressure, 4),
+            "x-queue-depth": float(self.queue_depth()),
+            "x-p99-token-latency-s": round(p99, 4) if p99 == p99 else -1.0,
+        }, workload_wide=True)
+        if ok:
+            self.metrics["autoscale_hints_published"] += 1
+        return ok
+
+    # -- stepping ------------------------------------------------------------
+    @property
+    def paused(self) -> bool:
+        """No replica is admitting: requests park in overflow until a
+        replacement lands (the serving analogue of the trainer's pause)."""
+        return not any(vid not in self._draining for vid in self._order)
+
+    def step_all(self) -> int:
+        """One decode step on every replica (draining ones too — their
+        in-flight batch must finish for the early release to be honest),
+        then replay any parked overflow into freed capacity."""
+        batches = 0
+        for vid in list(self._order):
+            eng = self.replicas.get(vid)
+            if eng is not None:
+                batches += 1 if eng.step_once() else 0
+        self._drain_overflow()
+        return batches
+
+    def telemetry(self) -> Dict[str, float]:
+        out = dict(self.metrics)
+        out["replicas_live"] = float(len(self._order))
+        out["replicas_admitting"] = float(
+            sum(1 for vid in self._order if vid not in self._draining))
+        out["slots_total"] = float(
+            sum(self.replicas[vid].slots for vid in self._order))
+        out["queue_depth"] = float(self.queue_depth())
+        out["overflow_depth"] = float(len(self._overflow))
+        return out

@@ -260,6 +260,7 @@ class HarvestPolicy(OptimizationPolicy):
 class AutoScalingPolicy(OptimizationPolicy):
     name = "auto_scaling"
     consumes_deploy = ("scale_out_in", "deploy_time_ms", "delay_tolerance_ms")
+    consumes_runtime = ("x-autoscale-pressure",)
     publishes = ()
 
     def __init__(self, gm, low: float = 0.25, high: float = 0.6):
@@ -362,11 +363,23 @@ class AutoScalingPolicy(OptimizationPolicy):
                 break
             if w in waiting:
                 continue
-            if not applicable(self.name, self.hints_for(w)):
+            eff = self.hints_for(w)
+            if not applicable(self.name, eff):
                 continue
             vms_w = by_w[w]
             total = sum(v.cores for v in vms_w)
             util = sum(v.util_p95 * v.cores for v in vms_w) / total
+            # a guest-published x-autoscale-pressure runtime hint (queue
+            # depth + tail latency, see agents.ServingTenant) overrides the
+            # platform's utilization view: the workload knows its own
+            # backlog better than util_p95 does
+            pressure = eff.get("x-autoscale-pressure")
+            if pressure is not None:
+                try:
+                    util = min(1.0, max(0.0, float(pressure)))
+                    self.stats["pressure_signals"] += 1
+                except (TypeError, ValueError):
+                    pass
             tgt = self.target_replicas(w, len(vms_w), util)
             if tgt > len(vms_w):
                 backoff = self._scale_out_backoff.get(w, 0)

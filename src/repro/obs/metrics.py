@@ -355,6 +355,9 @@ class MetricDict:
     def __len__(self) -> int:
         return len(self._vals)
 
+    def __repr__(self) -> str:
+        return repr(self._vals)
+
     def keys(self):
         return self._vals.keys()
 

@@ -1,0 +1,288 @@
+"""Scenario: the serving fleet as a real scheduler tenant under open-loop
+traffic.
+
+The last seed workload joins the bidirectional loop here: a fleet of
+synthetic-mode ``ServingEngine`` replicas (one per placed VM, all on the
+sim clock) runs as one workload of the live platform scheduler,
+co-tenanted with the background fleet classes the savings scenarios use
+(stateless scale-out web frontends, harvest-elastic web, stateful batch).
+A seeded wrk2-style open-loop generator (``sim.traffic``) drives a diurnal
+day of requests with a flash-crowd spike; because arrivals never wait on
+completions, every queueing episode the platform causes lands in the
+latency histograms instead of silently thinning the load:
+
+  * **spot/harvest reclaim** — two capacity-crunch waves chew through the
+    harvest web tier and into the serving replicas.  A noticed replica
+    stops admitting immediately, reroutes its queued requests, finishes
+    its in-flight decodes, and acks well inside the hinted 60 s window —
+    early release with zero lost requests;
+  * **power events** — an MA-datacenter power event on a serving server
+    throttles the fleet (availability 2.5 ≤ 3): decode slots halve
+    (compute shed, demand untouched); the next policy pass's
+    ``OVERCLOCK_OFFER`` restores them;
+  * **harvest growth** — ``SCALE_UP_OFFER`` grants convert spare cores
+    into extra decode slots;
+  * **autoscaling** — the leader agent publishes ``x-autoscale-pressure``
+    (queue depth + p99 token latency, not util) every 15 s;
+    ``AutoScalingPolicy`` consumes it: the diurnal trough drains surplus
+    replicas through the *consented* eviction path, the midday ramp and
+    the spike clone replicas back out.
+
+Invariants (asserted by the ``serving_fleet`` benchmark and the tenant
+tests): zero notice-window violations, ≥1 serving early release via a
+guest ack, zero lost requests, goodput ≥ 95%, e2e p99 under the committed
+bound, and the bus-derived lifecycle books reconcile with the pipeline.
+
+Pure python (no jax): run as ``python -m
+repro.sim.casestudies.serving_fleet``.  Sizes honor
+``SERVING_FLEET_SERVERS`` / ``SERVING_FLEET_DAY_S`` /
+``SERVING_FLEET_PEAK_RPS``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+from typing import Dict
+
+from repro import obs
+from repro.agents import (STATEFUL, STATELESS, AgentPolicy, AgentRuntime,
+                          ServingTenant)
+from repro.sched import Scheduler
+from repro.serve.engine import ServingEngine
+from repro.sim.cluster import VM
+from repro.sim.traffic import OpenLoopTraffic, diurnal_rate, with_spike
+
+DAY_S = 1200.0                  # one diurnal period == the sim day
+TAIL_S = 90.0                   # post-horizon drain window
+STEP_S = 0.25                   # decode pump cadence (sim s per token)
+TICK_S = 15.0
+POLICY_PERIOD_S = 45.0
+HINT_PERIOD_S = 15.0            # autoscale-pressure publish cadence
+N_SERVERS = 12
+CORES_PER_SERVER = 48.0
+
+WORKLOAD = "svc"
+N_SERVE_VMS = 4
+SERVE_VM_CORES = 8.0
+SLOTS_PER_VM = 4
+MAX_LEN = 64
+SERVE_NOTICE_S = 60.0
+# modeled drain seconds per remaining decode step: deliberately above the
+# pump cadence so the in-flight batch always finishes before the ack fires
+TOKEN_TIME_S = STEP_S * 1.6
+P99_TARGET_S = 5.0              # token-latency target feeding the pressure
+P99_BOUND_S = 30.0              # committed e2e bound (benchmark + CI)
+
+BASE_RPS = 2.0
+PEAK_RPS = 5.0
+SPIKE_MULT = 2.5
+SPIKE_DUR_S = 60.0
+
+N_WEBH_VMS = 6                  # harvest web: the pre-serving reclaim tier
+N_WEB_WORKLOADS = 3
+N_WEB_VMS = 8
+N_BATCH_WORKLOADS = 2
+N_BATCH_VMS = 6
+
+# wave sizes mirror ``ai_training``: the harvest web tier (lowest keep) is
+# reclaimed first, then the waves bite into the serving replicas
+WAVE1_CORES = N_WEBH_VMS * 4.0 + 2.0                    # 1 serving VM
+WAVE2_CORES = N_WEBH_VMS * 4.0 + SERVE_VM_CORES + 2.0   # 2 serving VMs
+
+
+def _event_t(frac: float, horizon: float) -> float:
+    """An event instant just after a tick, so replacement placements wait
+    for the next tick and the drain window is visible in the histograms."""
+    return (int(frac * horizon) // int(TICK_S)) * TICK_S + 2.0
+
+
+def build(seed: int, n_servers: int, day_s: float, peak_rps: float):
+    rng = random.Random(seed)
+    registry = obs.MetricsRegistry(enabled=True)
+    s = Scheduler(default_notice_s=30.0, policy_period_s=POLICY_PERIOD_S,
+                  metrics=registry)
+    s.lifecycle = obs.LifecycleObserver(s.gm.bus, registry=registry)
+    for i in range(n_servers):
+        s.cluster.add_server(f"region-0/s{i}", CORES_PER_SERVER,
+                             region="region-0")
+
+    policies: Dict[str, AgentPolicy] = {}
+
+    # harvest web: stateless scale-out, the tier every wave reclaims first
+    s.gm.register_workload("webh", {
+        "scale_out_in": True, "scale_up_down": True,
+        "preemptibility_pct": 90.0, "availability_nines": 3.0,
+        "delay_tolerance_ms": 5_000.0})
+    policies["webh"] = AgentPolicy(statefulness=STATELESS, scale_out_in=True)
+    vm_id = 0
+    for _ in range(N_WEBH_VMS):
+        s.submit(VM(f"vm{vm_id}", "webh", "", 4.0,
+                    util_p95=rng.uniform(0.30, 0.55), spot=True,
+                    harvest=True))
+        vm_id += 1
+
+    # plain spot web: stateless scale-out; power events evict them
+    for i in range(N_WEB_WORKLOADS):
+        w = f"web-{i}"
+        s.gm.register_workload(w, {
+            "scale_out_in": True, "preemptibility_pct": 90.0,
+            "availability_nines": 3.5, "delay_tolerance_ms": 5_000.0})
+        policies[w] = AgentPolicy(statefulness=STATELESS, scale_out_in=True)
+        for _ in range(N_WEB_VMS):
+            s.submit(VM(f"vm{vm_id}", w, "", 4.0,
+                        util_p95=rng.uniform(0.30, 0.55), spot=True))
+            vm_id += 1
+
+    # stateful batch: background load that checkpoints-then-drains
+    for i in range(N_BATCH_WORKLOADS):
+        w = f"batch-{i}"
+        s.gm.register_workload(w, {
+            "preemptibility_pct": 45.0, "availability_nines": 2.5,
+            "delay_tolerance_ms": 30_000.0, "x-eviction-notice-s": 120.0})
+        policies[w] = AgentPolicy(statefulness=STATEFUL,
+                                  state_gb=8.0 if i % 2 == 0 else 30.0,
+                                  ckpt_gbps=0.2)
+        for _ in range(N_BATCH_VMS):
+            s.submit(VM(f"vm{vm_id}", w, "", 8.0,
+                        util_p95=rng.uniform(0.2, 0.8), spot=True))
+            vm_id += 1
+
+    s.schedule_pending()                # the background fleet lands first
+
+    # the serving deployment: latency-critical (availability 2.5 keeps
+    # power events in throttle territory), harvest-elastic, consenting to
+    # scale-out/in — and a hinted 60 s eviction notice its drains honor
+    s.gm.register_workload(WORKLOAD, {
+        "scale_out_in": True, "scale_up_down": True,
+        "preemptibility_pct": 80.0, "availability_nines": 2.5,
+        "delay_tolerance_ms": 1_000.0,
+        "x-eviction-notice-s": SERVE_NOTICE_S})
+
+    def engine_factory(vm_id: str, slots: int) -> ServingEngine:
+        return ServingEngine(None, None, None, batch_slots=slots,
+                             max_len=MAX_LEN, now=s.engine.clock,
+                             registry=registry, name=vm_id,
+                             on_complete=lambda r: tenant._request_done(r))
+
+    tenant = ServingTenant(WORKLOAD, engine_factory,
+                           slots_per_vm=SLOTS_PER_VM,
+                           token_time_s=TOKEN_TIME_S,
+                           p99_target_s=P99_TARGET_S)
+    policies[WORKLOAD] = tenant.policy()
+    for i in range(N_SERVE_VMS):
+        s.submit(VM(f"svc{i}", WORKLOAD, "", SERVE_VM_CORES, util_p95=0.5,
+                    spot=True, harvest=True))
+    s.schedule_pending()                # the replicas land on the spare
+    runtime = AgentRuntime(s, policies=policies)    # adopts the replicas
+
+    rate = with_spike(
+        diurnal_rate(BASE_RPS, peak_rps, day_s),
+        at_s=0.7 * day_s, dur_s=SPIKE_DUR_S, mult=SPIKE_MULT)
+    traffic = OpenLoopTraffic(s.engine, tenant.submit, rate, day_s,
+                              seed=seed, prompt_len=(2, 8),
+                              max_new=(4, 16), registry=registry)
+    tenant.completion_sinks.append(traffic.observe_completion)
+    return s, runtime, tenant, traffic, registry
+
+
+def run(seed: int = 0, n_servers: int = N_SERVERS, day_s: float = DAY_S,
+        peak_rps: float = PEAK_RPS) -> Dict:
+    s, runtime, tenant, traffic, registry = build(seed, n_servers, day_s,
+                                                  peak_rps)
+    horizon = day_s
+
+    for frac, cores in ((0.3, WAVE1_CORES), (0.6, WAVE2_CORES)):
+        s.engine.at(_event_t(frac, horizon),
+                    lambda c=cores: s.capacity_crunch("region-0", c))
+
+    def power_on_replica():
+        lead = next((v for v in tenant._order
+                     if s.cluster.vms.get(v) is not None
+                     and s.cluster.vms[v].server), None)
+        if lead is not None:
+            s.power_event(s.cluster.vms[lead].server, shed_frac=0.5)
+    s.engine.at(_event_t(0.45, horizon), power_on_replica)
+
+    # the decode pump: every replica (draining ones included — their
+    # in-flight batch must finish for the early release to be honest)
+    # advances one token per cadence; past the horizon it keeps running
+    # through the tail so the last arrivals complete
+    s.engine.every(STEP_S, tenant.step_all, until=horizon + TAIL_S)
+    # the leader's autoscale signal, refreshed well inside a policy period
+    s.engine.every(HINT_PERIOD_S, tenant.publish_autoscale_hint,
+                   until=horizon)
+
+    # ticks must cover the replacement horizon (placements only happen on
+    # a tick); traffic arms its own arrival chain on the same engine
+    s.start(TICK_S, 4.0 * horizon)
+    traffic.start()
+    s.run_until(horizon + TAIL_S)
+
+    ev = s.evictor
+    slog = [t for t in ev.log if t.workload == WORKLOAD]
+    early_all = [t for t in ev.log if t.outcome == "early_released"]
+    tm = tenant.telemetry()
+    rm = runtime.telemetry()
+    ts = traffic.summary()
+    tok = registry.histogram("wi_serving_token_latency_s").summary()
+    life = s.lifecycle.summary()
+    recon = s.lifecycle.reconcile(ev)
+    # the bus-derived lifecycle books must agree with the pipeline's own
+    assert recon["ok"], recon["diffs"]
+    assert life["early_released"] == len(early_all)
+    assert life["violations"] == len(ev.violations())
+    scale_outs = sum(1 for v in s.cluster.vms
+                     if v.startswith(f"{WORKLOAD}.as"))
+    out = {
+        "waves": s.stats.get("capacity_crunches", 0),
+        "violations": int(life["violations"]),
+        "serving_early_releases":
+            sum(1 for t in slog if t.outcome == "early_released"),
+        "serving_ladder_kills":
+            sum(1 for t in slog if t.outcome == "killed"),
+        "fleet_early_releases": len(early_all) - sum(
+            1 for t in slog if t.outcome == "early_released"),
+        "offered": ts["offered"],
+        "completed": ts["completed"],
+        "goodput_frac": ts["goodput_frac"],
+        "goodput_rps": ts["completed"] / horizon,
+        "e2e_p50_s": ts["e2e_p50_s"],
+        "e2e_p99_s": ts["e2e_p99_s"],
+        "ttft_p99_s": ts["ttft_p99_s"],
+        "token_p50_s": tok.get("p50", float("nan")),
+        "token_p99_s": tok.get("p99", float("nan")),
+        "p99_bound_s": P99_BOUND_S,
+        "requests_lost": tm.get("requests_lost", 0.0),
+        "requests_rerouted": tm.get("requests_rerouted", 0.0),
+        "requests_overflowed": tm.get("requests_overflowed", 0.0),
+        "drains": tm.get("drains", 0.0),
+        "throttle_notices": tm.get("throttle_notices", 0.0),
+        "restores": tm.get("restores", 0.0),
+        "harvest_slots_granted": tm.get("harvest_slots_granted", 0.0),
+        "ack_margin_min_s": tm.get("ack_margin_min_s", float("nan")),
+        "scale_outs": scale_outs,
+        "pressure_signals":
+            s.policies["auto_scaling"].stats.get("pressure_signals", 0),
+        "replicas_adopted": tm.get("replicas_adopted", 0.0),
+        "replicas_final": len(tenant._order),
+        "replacements_placed": rm.get("replacements_placed", 0.0),
+        "obs_violations": int(life["violations"]),
+        "obs_reconcile_ok": recon["ok"],
+        "obs_max_notice_s": life["max_notice_s"],
+        "obs_notice_to_ack_p100_s": life["notice_to_ack_s"].get("p100"),
+        "obs_acks_observed": life["notice_to_ack_s"].get("count", 0),
+    }
+    s.gm.close()        # scenario teardown: release WAL/segment handles
+    return out
+
+
+if __name__ == "__main__":
+    result = run(
+        seed=0,
+        n_servers=int(os.environ.get("SERVING_FLEET_SERVERS", N_SERVERS)),
+        day_s=float(os.environ.get("SERVING_FLEET_DAY_S", DAY_S)),
+        peak_rps=float(os.environ.get("SERVING_FLEET_PEAK_RPS", PEAK_RPS)))
+    for k, v in result.items():
+        print(f"{k}: {v}")
+    print("RESULT " + json.dumps(result))

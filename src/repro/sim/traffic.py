@@ -1,0 +1,169 @@
+"""Seeded constant-rate open-loop traffic for the serving tier (wrk2-style).
+
+The serving bar in this repo is *p99 token latency under reclaim storms*,
+and a closed-loop client cannot measure that: when the server stalls, a
+closed-loop client stalls with it, silently dropping exactly the samples
+that would have shown the tail (coordinated omission).  ``OpenLoopTraffic``
+therefore schedules arrivals purely from a rate profile on the sim clock —
+the next arrival time is ``t + 1/rate(t)`` regardless of whether previous
+requests completed, so a drowning fleet accumulates queue instead of
+slowing the workload down.
+
+Pieces:
+
+  * rate profiles — ``constant_rate`` (the wrk2 baseline), ``diurnal_rate``
+    (cosine day curve, mirroring ``agents.DiurnalProfile``), ``with_spike``
+    (multiplier overlay for a flash-crowd window).  Profiles are plain
+    ``t -> requests/s`` callables and compose.
+  * ``OpenLoopTraffic`` — the generator.  Seeded RNG draws prompt lengths
+    and decode budgets, ``submit`` is any callable taking a
+    ``serve.engine.Request`` (the tenant router in the fleet case study, an
+    engine's ``submit`` in unit tests).  Completions flow back through
+    ``observe_completion`` and land in full ``obs`` latency histograms —
+    e2e *and* time-to-first-token — so percentiles come from the same
+    bucket math the rest of the fleet reports.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+from repro.serve.engine import Request
+
+RateFn = Callable[[float], float]
+
+
+def constant_rate(rps: float) -> RateFn:
+    """wrk2-style fixed arrival rate."""
+    return lambda t: rps
+
+
+def diurnal_rate(base_rps: float, peak_rps: float, period_s: float,
+                 trough_t: float = 0.0) -> RateFn:
+    """Cosine day curve: ``base`` at the trough, ``peak`` half a period
+    later."""
+    mid = (base_rps + peak_rps) / 2.0
+    amp = (peak_rps - base_rps) / 2.0
+
+    def rate(t: float) -> float:
+        return mid - amp * math.cos(2.0 * math.pi * (t - trough_t)
+                                    / period_s)
+    return rate
+
+
+def with_spike(profile: RateFn, at_s: float, dur_s: float,
+               mult: float) -> RateFn:
+    """Flash-crowd overlay: multiply ``profile`` by ``mult`` inside the
+    window ``[at_s, at_s + dur_s)``."""
+    def rate(t: float) -> float:
+        r = profile(t)
+        if at_s <= t < at_s + dur_s:
+            return r * mult
+        return r
+    return rate
+
+
+class OpenLoopTraffic:
+    """Constant-rate open-loop request generator on the sim clock.
+
+    Arrivals self-schedule: each one books the next at ``t + 1/rate(t)``
+    via ``engine.at``, never waiting on a completion — the coordinated
+    omission guard the module docstring describes.  ``rate(t) <= 0``
+    (a profile can model an overnight dead zone) skips forward in
+    ``idle_step_s`` probes until the rate recovers.
+    """
+
+    def __init__(self, engine, submit: Callable[[Request], Any],
+                 rate_fn: RateFn, horizon_s: float, seed: int = 0,
+                 prompt_len: Tuple[int, int] = (2, 8),
+                 max_new: Tuple[int, int] = (4, 16),
+                 registry: Optional[obs.MetricsRegistry] = None,
+                 idle_step_s: float = 1.0):
+        self.engine = engine
+        self.submit = submit
+        self.rate_fn = rate_fn
+        self.horizon_s = float(horizon_s)
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        self.idle_step_s = float(idle_step_s)
+        self._rng = random.Random(seed)
+        self._next_rid = 0
+        self.arrivals: List[float] = []
+        reg = registry if registry is not None \
+            else obs.MetricsRegistry(enabled=True)
+        self.registry = reg
+        self.metrics = obs.MetricDict(reg, prefix="wi_traffic_")
+        for k in ("offered", "completed"):
+            self.metrics[k] = 0.0
+        self._e2e = reg.histogram(
+            "wi_traffic_e2e_latency_s", "submit->done request latency")
+        self._ttft = reg.histogram(
+            "wi_traffic_ttft_s", "submit->first-token latency")
+
+    # -- arrival chain -------------------------------------------------------
+    def start(self):
+        """Arm the arrival chain from the current sim time."""
+        self._schedule_next(self.engine.clock.t)
+
+    def _schedule_next(self, t_from: float):
+        rate = self.rate_fn(t_from)
+        if rate <= 0.0:
+            t_next = t_from + self.idle_step_s
+            fn = lambda: self._schedule_next(self.engine.clock.t)
+        else:
+            t_next = t_from + 1.0 / rate
+            fn = self._arrive
+        if t_next <= self.horizon_s:
+            self.engine.at(t_next, fn)
+
+    def _arrive(self):
+        now = self.engine.clock.t
+        self.arrivals.append(now)
+        self.metrics["offered"] += 1
+        req = self._make_request(now)
+        self.submit(req)
+        # open loop: the next arrival is booked from the schedule, not
+        # from this request's fate
+        self._schedule_next(now)
+
+    def _make_request(self, now: float) -> Request:
+        rid = self._next_rid
+        self._next_rid += 1
+        plen = self._rng.randint(*self.prompt_len)
+        toks = np.asarray([self._rng.randrange(256) for _ in range(plen)],
+                          np.int32)
+        req = Request(rid=rid, prompt=toks,
+                      max_new=self._rng.randint(*self.max_new))
+        req.t_submit = now
+        return req
+
+    # -- completion side -----------------------------------------------------
+    def observe_completion(self, req: Request):
+        """Latency sink for completed requests (wire to the engine's
+        ``on_complete`` or the tenant's ``completion_sinks``)."""
+        self.metrics["completed"] += 1
+        if req.t_submit is None or req.t_done is None:
+            return
+        self._e2e.observe(max(0.0, req.t_done - req.t_submit))
+        if req.t_first_token is not None:
+            self._ttft.observe(max(0.0, req.t_first_token - req.t_submit))
+
+    def summary(self) -> Dict[str, float]:
+        e2e = self._e2e.summary()
+        ttft = self._ttft.summary()
+        offered = self.metrics["offered"]
+        completed = self.metrics["completed"]
+        dur = self.arrivals[-1] - self.arrivals[0] \
+            if len(self.arrivals) > 1 else 0.0
+        return {
+            "offered": offered,
+            "completed": completed,
+            "goodput_frac": completed / offered if offered else 0.0,
+            "offered_rps": (len(self.arrivals) - 1) / dur if dur else 0.0,
+            "e2e_p50_s": e2e["p50"], "e2e_p99_s": e2e["p99"],
+            "ttft_p50_s": ttft["p50"], "ttft_p99_s": ttft["p99"],
+        }

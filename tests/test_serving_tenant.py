@@ -1,0 +1,281 @@
+"""Serving-as-tenant tests: the replica fleet attached to VMs placed by
+the REAL scheduler.
+
+The ``ServingTenant`` is engine-agnostic, so the notice -> drain -> ack ->
+early-release -> re-grow choreography is pinned here against a stub engine
+(fast, no jax); one subprocess test then runs the full ``serving_fleet``
+case study with synthetic-mode ``ServingEngine`` replicas under open-loop
+traffic and checks the acceptance bars end to end.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.agents import AgentRuntime, ServingAgent, ServingTenant
+from repro.sched import Scheduler
+from repro.sim.cluster import VM
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+class Req:
+    """Minimal request for the stub: ``steps`` decode steps remain."""
+
+    def __init__(self, rid, steps=4):
+        self.rid = rid
+        self.steps = steps
+
+
+class StubEngine:
+    """Implements the tenant-facing engine protocol; records calls."""
+
+    def __init__(self, vm_id, slots):
+        self.vm_id = vm_id
+        self.slots = slots
+        self.active = []
+        self.queue = []
+        self.draining = False
+        self.resizes = []
+        self.p99 = float("nan")
+
+    def submit(self, req):
+        if self.draining:
+            return False
+        if len(self.active) < self.slots:
+            self.active.append(req)
+        else:
+            self.queue.append(req)
+        return True
+
+    def queue_depth(self):
+        return len(self.queue)
+
+    def active_count(self):
+        return len(self.active)
+
+    def drain(self):
+        self.draining = True
+        q, self.queue = self.queue, []
+        steps = max((r.steps for r in self.active), default=0)
+        return steps, q
+
+    def resize_slots(self, n):
+        self.resizes.append(n)
+        self.slots = n
+        return n
+
+    def step_once(self):
+        for r in self.active:
+            r.steps -= 1
+        self.active = [r for r in self.active if r.steps > 0]
+        return 1
+
+    def p99_token_latency(self):
+        return self.p99
+
+
+def make_tenant(n_vms=2, slots_per_vm=4, notice_s=60.0, token_time_s=1.0,
+                n_servers=3, harvest=True, hints=None):
+    s = Scheduler(default_notice_s=30.0)
+    for i in range(n_servers):
+        s.cluster.add_server(f"region-0/s{i}", 32, region="region-0")
+    h = {"scale_out_in": True, "scale_up_down": True,
+         "preemptibility_pct": 80.0, "availability_nines": 2.5,
+         "delay_tolerance_ms": 1000.0, "x-eviction-notice-s": notice_s}
+    h.update(hints or {})
+    s.gm.register_workload("svc", h)
+    engines = {}
+
+    def factory(vm_id, slots):
+        e = StubEngine(vm_id, slots)
+        engines[vm_id] = e
+        return e
+
+    tenant = ServingTenant("svc", factory, slots_per_vm=slots_per_vm,
+                           token_time_s=token_time_s, p99_target_s=5.0)
+    for i in range(n_vms):
+        s.submit(VM(f"svc{i}", "svc", "", 8, util_p95=0.5, spot=True,
+                    harvest=harvest))
+    s.schedule_pending()
+    rt = AgentRuntime(s, policies={"svc": tenant.policy()})
+    return s, rt, tenant, engines
+
+
+def test_notice_drain_ack_early_release_and_regrow():
+    s, rt, tenant, engines = make_tenant()
+    assert all(isinstance(a, ServingAgent) for a in rt.agents.values())
+    # 4 decode steps in flight everywhere, plus queued work on each replica
+    for e in engines.values():
+        e.active = [Req(1, 4), Req(2, 4)]
+        e.queue = [Req(3), Req(4)]
+    r = s.capacity_crunch("region-0", 8)
+    assert r["evictions"] == 1
+    ticket = next(iter(s.evictor.tickets.values()))
+    assert ticket.notice_s == 60.0          # hinted window honored
+    vm_id = ticket.vm_id
+    victim = engines[vm_id]
+    survivor = next(e for vid, e in engines.items() if vid != vm_id)
+    # admission stopped NOW: the victim is draining and its queued (not
+    # yet started) requests moved to the surviving replica
+    assert victim.draining and not victim.queue
+    assert not tenant.submit(Req(9)) == vm_id
+    assert tenant.metrics["requests_rerouted"] == 2
+    assert survivor.queue_depth() + survivor.active_count() >= 4
+    # the ack waits for the modeled drain (4 steps x 1 s/token)...
+    s.run_until(3.9)
+    assert s.cluster.vms[vm_id].alive
+    victim.active.clear()                   # in-flight batch finished
+    # ...then lands on wi.events.acks and the pipeline early-releases
+    s.run_until(4.1)
+    assert not s.cluster.vms[vm_id].alive
+    done = s.evictor.log[-1]
+    assert done.outcome == "early_released"
+    assert abs(done.lead_time_s - 4.0) < 1e-9
+    assert s.evictor.violations() == []
+    # the drain completed before the release: no request was lost
+    assert tenant.metrics["requests_lost"] == 0.0
+    assert len(tenant._order) == 1
+    # the replacement VM lands on the next tick and the fleet re-grows
+    s.tick()
+    assert len(tenant._order) == 2
+    assert rt.metrics["replacements_placed"] == 1
+    # the ladder kill at the 60 s deadline is a no-op
+    s.run_until(100.0)
+    assert s.evictor.stats["kills"] == 0
+
+
+def test_slow_drain_rides_ladder_and_loses_bounded_requests():
+    # 4 decode steps x 30 s/token = 120 s drain cannot fit the 60 s
+    # window: the ladder kill wins, and only the in-flight batch (bounded
+    # by the replica's slots) is lost — queued requests were rerouted
+    s, rt, tenant, engines = make_tenant(token_time_s=30.0)
+    for e in engines.values():
+        e.active = [Req(i, 4) for i in range(4)]
+        e.queue = [Req(10), Req(11)]
+    s.capacity_crunch("region-0", 8)
+    assert tenant.metrics["ack_margin_min_s"] < 0  # agent knew it would lose
+    assert tenant.metrics["requests_rerouted"] == 2
+    s.run_until(200.0)
+    done = s.evictor.log[-1]
+    assert done.outcome == "killed"
+    assert abs(done.lead_time_s - 60.0) < 1e-9     # full window honored
+    assert s.evictor.violations() == []
+    assert tenant.metrics["requests_lost"] == 4    # == slots, never more
+    assert tenant.metrics["requests_lost"] <= 4
+    assert len(tenant._order) == 1
+
+
+def test_throttle_halves_slots_and_policy_pass_restores():
+    s, rt, tenant, engines = make_tenant(harvest=False)
+    lead = s.cluster.vms[tenant._order[0]]
+    s.power_event(lead.server, shed_frac=0.9)
+    assert all(e.slots == 2 for e in engines.values())  # 4 -> 2
+    # serving throttles shed compute (decode slots), not p95 demand (else
+    # the overclock offer that restores the slots would never re-qualify)
+    assert lead.util_p95 == 0.5
+    # duplicate throttle notices do not re-toggle
+    s.power_event(lead.server, shed_frac=0.9)
+    assert all(e.slots == 2 for e in engines.values())
+    assert tenant.metrics["throttle_notices"] >= 2
+    # the periodic pass's OVERCLOCK_OFFER (util 0.5 > 0.4, applicable)
+    # clears it through the guest channel
+    s.run_policies()
+    assert all(e.slots == 4 for e in engines.values())
+    assert tenant.metrics["restores"] == 1
+
+
+def test_harvest_scale_up_offer_grows_decode_slots():
+    s, rt, tenant, engines = make_tenant(slots_per_vm=2)
+    s.run_policies()                    # HarvestPolicy offers spare cores
+    # 8-core VMs, 2 slots each -> 4 cores/slot; the grow cap (50% of
+    # nominal) grants exactly one extra decode slot per replica
+    assert tenant.metrics["harvest_slots_granted"] == 2
+    assert all(e.slots == 3 for e in engines.values())
+
+
+def test_total_reclaim_parks_requests_until_replacement_lands():
+    s, rt, tenant, engines = make_tenant(n_vms=1)
+    s.capacity_crunch("region-0", 8)    # the only replica is reclaimed
+    assert tenant.paused                # nothing is admitting
+    assert tenant.submit(Req(1)) is None
+    assert tenant.metrics["requests_overflowed"] == 1
+    s.run_until(4.1)                    # empty batch: immediate-ish ack
+    assert len(tenant._order) == 0
+    s.tick()                            # replacement lands
+    assert not tenant.paused
+    # the parked request boarded the fresh replica
+    assert tenant.metrics["overflow_replayed"] == 1
+    new_eng = engines[tenant._order[0]]
+    assert new_eng.active_count() == 1
+
+
+def test_autoscale_pressure_hint_drives_scale_out_and_back_in():
+    s, rt, tenant, engines = make_tenant()
+    pol = s.policies["auto_scaling"]
+    # saturated fleet: full batches plus deep queues -> pressure pins high
+    for e in engines.values():
+        e.active = [Req(i, 4) for i in range(4)]
+        e.queue = [Req(10 + i) for i in range(6)]
+    assert tenant.autoscale_pressure() > 0.6
+    assert tenant.publish_autoscale_hint()
+    s.run_policies()
+    assert pol.stats["pressure_signals"] >= 1
+    assert pol.stats["rescale"] >= 1
+    s.schedule_pending()                # the clone VM lands...
+    assert len(tenant._order) == 3      # ...and the tenant adopted it
+    assert any(v.startswith("svc.as") for v in tenant._order)
+    # demand gone: pressure collapses and the policy drains surplus
+    # replicas through the eviction pipeline (consented shrink still pays
+    # the hinted notice window -> the drain choreography runs)
+    for e in engines.values():
+        e.active.clear()
+        e.queue.clear()
+    assert tenant.autoscale_pressure() < 0.25
+    assert tenant.publish_autoscale_hint()
+    s.run_policies()
+    assert len(s.evictor.tickets) >= 1
+    assert tenant.metrics["drains"] >= 1
+
+
+def test_latency_pressure_scales_out_without_queue():
+    # tail latency alone (no backlog) must trip the scale-out trigger:
+    # this is the "queue depth AND p99, not util alone" signal
+    s, rt, tenant, engines = make_tenant()
+    for e in engines.values():
+        e.p99 = 7.5                     # 1.5x the 5 s target
+    assert tenant.autoscale_pressure() > 0.6
+    for e in engines.values():
+        e.p99 = float("nan")            # no samples yet -> occupancy only
+    assert tenant.autoscale_pressure() < 0.25
+
+
+@pytest.mark.skipif(os.environ.get("CI", "") != ""
+                    and os.environ.get("SERVING_FLEET_E2E", "") == "",
+                    reason="CI runs this exact scenario (with the same "
+                           "asserts) in the bench-smoke job; set "
+                           "SERVING_FLEET_E2E=1 to force it in tier-1 too")
+def test_serving_fleet_case_study_end_to_end():
+    """Synthetic-mode replicas under the live scheduler and open-loop
+    diurnal traffic: reclaim waves + power throttle + flash crowd, zero
+    notice violations, early releases via drain acks, bounded p99, and a
+    clean lifecycle reconcile (the ISSUE's acceptance bars)."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.sim.casestudies.serving_fleet"],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    r = json.loads(line[len("RESULT "):])
+    assert r["waves"] >= 2
+    assert r["violations"] == 0
+    assert r["serving_early_releases"] >= 1
+    assert r["obs_reconcile_ok"]
+    assert r["goodput_frac"] >= 0.95
+    assert r["e2e_p99_s"] <= r["p99_bound_s"]
+    assert r["requests_lost"] == 0
+    assert r["throttle_notices"] >= 1 and r["restores"] >= 1
+    assert r["scale_outs"] >= 1
